@@ -1,0 +1,51 @@
+"""Kernel-layer microbench: OASRS ingest + stats pass, jnp path vs the
+Pallas interpret path (correctness-grade on CPU; TPU is the target)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core import oasrs, query
+from repro.kernels import ops
+
+SPEC = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def run() -> list:
+    rows = []
+    m, s, n = 65_536, 16, 256
+    key = jax.random.PRNGKey(0)
+    sid = jax.random.randint(key, (m,), 0, s)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m,))
+
+    st0 = oasrs.init(s, n, SPEC, key)
+    fold = jax.jit(oasrs.update_chunk)
+    us = time_call(fold, st0, sid, x, warmup=1, iters=5)
+    rows.append(emit("kernel.oasrs_fold.jnp", us,
+                     f"items_per_sec={m / (us / 1e6):.0f}"))
+
+    stats = jax.jit(lambda st: query.stats(st))
+    st1 = fold(st0, sid, x)
+    us = time_call(stats, st1, warmup=1, iters=5)
+    rows.append(emit("kernel.stats_pass.jnp", us, ""))
+
+    mom = jax.jit(lambda v, i: ops.stratum_moments(v, i, s,
+                                                   use_pallas=False))
+    us = time_call(mom, x, sid, warmup=1, iters=5)
+    rows.append(emit("kernel.stratum_moments.ref", us,
+                     f"items_per_sec={m / (us / 1e6):.0f}"))
+
+    # Pallas interpret mode — correctness path only on CPU; note derived.
+    small = 4096
+    us = time_call(
+        lambda: ops.stratum_moments(x[:small], sid[:small], s,
+                                    use_pallas=True),
+        warmup=1, iters=3)
+    rows.append(emit("kernel.stratum_moments.pallas_interpret", us,
+                     "interpret_mode=1 (TPU lowering is the target)"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Training-plane benchmark: approximate-training throughput vs sampling
+fraction (the paper's accuracy⇄throughput dial on the train step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro import configs as cfgs
+from repro.models import api
+from repro.models.param import init_params
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+def run() -> list:
+    rows = []
+    cfg = cfgs.get_config("phi4-mini-3.8b", smoke=True).replace(
+        dtype=jnp.float32)
+    params = init_params(api.skeleton(cfg), jax.random.PRNGKey(0))
+    opt_cfg = opt.OptConfig(warmup_steps=2)
+    state = opt.init_state(params, None, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+
+    window, seq = 32, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (window, seq), 0,
+                              cfg.vocab_size)
+    for frac in (1.0, 0.5, 0.25):
+        b = max(int(window * frac), 2)
+        batch = {"tokens": toks[:b],
+                 "weights": jnp.full((b,), 1.0 / frac, jnp.float32)}
+        us = time_call(step, state, batch, warmup=1, iters=3)
+        rows.append(emit(
+            f"train.phi4smoke.frac{int(frac * 100)}", us,
+            f"seqs_per_sec={b / (us / 1e6):.1f};"
+            f"window_per_sec={window / (us / 1e6):.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Shared benchmark harness utilities.
+
+Each benchmark module reproduces one paper table/figure on this CPU
+container: absolute numbers are CPU-scale, but the RELATIVE comparisons
+(OASRS vs SRS vs STS vs native; accuracy-vs-fraction curves) are the
+paper's claims and are hardware-independent. Output: CSV rows
+``name,us_per_call,derived`` as required by the assignment scaffold.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10,
+              **kw) -> float:
+    """Median wall-time per call in microseconds (jitted fns)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row)
+    return row

@@ -1,0 +1,63 @@
+"""Figure 10 + 11(right): NYC-taxi case study (§6.3) — average trip
+distance per borough (group means with error bounds)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from benchmarks.systems import SPEC, all_systems
+from repro.core import oasrs, query
+from repro.stream import StreamAggregator, TaxiSource
+
+ITEMS = 65_536
+
+
+def run() -> list:
+    rows = []
+    agg = StreamAggregator(TaxiSource(), seed=10)
+    wins = [agg.interval_chunk(e, ITEMS) for e in range(4)]
+    for frac in (0.6, 0.3, 0.1):
+        systems = all_systems(6, frac, ITEMS)
+        for name, fn in systems.items():
+            if name == "native" and frac != 0.6:
+                continue
+            us = time_call(fn, wins[0].values, wins[0].stratum_ids,
+                           warmup=1, iters=5)
+            losses = []
+            for w in wins:
+                est = fn(w.values, w.stratum_ids)
+                ex = float(jnp.sum(w.values))
+                losses.append(abs(float(est.value) - ex) / abs(ex))
+            rows.append(emit(
+                f"fig10.{name}.frac{int(frac * 100)}", us,
+                f"items_per_sec={ITEMS / (us / 1e6):.0f};"
+                f"acc_loss={np.mean(losses):.5f}"))
+
+    # the paper's actual query: per-borough mean distance (+ error bound)
+    @jax.jit
+    def borough_means(values, sids):
+        st = oasrs.init(6, 2048, SPEC, jax.random.PRNGKey(0))
+        st = oasrs.update_chunk(st, sids, values)
+        return query.group_means(st)
+
+    est = borough_means(wins[0].values, wins[0].stratum_ids)
+    exact = [float(jnp.mean(wins[0].values[wins[0].stratum_ids == b]))
+             for b in range(6)]
+    worst = max(abs(float(est.value[b]) - exact[b]) / exact[b]
+                for b in range(6))
+    rows.append(emit("fig10.borough_means.oasrs", 0.0,
+                     f"worst_borough_rel_err={worst:.5f}"))
+
+    systems = all_systems(6, 0.6, ITEMS)
+    for name in ("oasrs_batched", "srs", "sts"):
+        us = time_call(systems[name], wins[0].values, wins[0].stratum_ids,
+                       warmup=1, iters=5)
+        rows.append(emit(f"fig11.taxi.{name}", us,
+                         f"latency_ms_per_window={us / 1e3:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

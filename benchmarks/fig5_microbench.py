@@ -1,0 +1,73 @@
+"""Figure 5: (a) peak throughput and (b) accuracy loss vs sampling
+fraction; (c) throughput vs batch interval (chunk size)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from benchmarks.systems import all_systems, capacity_for_fraction
+from benchmarks.systems import make_oasrs_batched
+from repro.stream import GaussianSource, StreamAggregator, skewed
+
+ITEMS = 65_536
+FRACTIONS = (0.8, 0.6, 0.4, 0.2, 0.1)
+
+
+def _windows(n, items=ITEMS, seed=0):
+    agg = StreamAggregator(
+        skewed(GaussianSource(), (0.6, 0.3, 0.1)), seed=seed)
+    return [agg.interval_chunk(e, items) for e in range(n)]
+
+
+def run() -> list:
+    rows = []
+    wins = _windows(4)
+    exact = [float(jnp.sum(w.values)) for w in wins]
+
+    # (a)+(b): throughput + accuracy loss per fraction
+    for frac in FRACTIONS:
+        systems = all_systems(3, frac, ITEMS)
+        for name, fn in systems.items():
+            if name == "native" and frac != FRACTIONS[0]:
+                continue   # native is fraction-independent
+            us = time_call(fn, wins[0].values, wins[0].stratum_ids,
+                           warmup=1, iters=5)
+            losses = []
+            for w, ex in zip(wins, exact):
+                est = fn(w.values, w.stratum_ids)
+                losses.append(abs(float(est.value) - ex) / abs(ex))
+            thr = ITEMS / (us / 1e6)
+            rows.append(emit(
+                f"fig5.{name}.frac{int(frac * 100)}", us,
+                f"items_per_sec={thr:.0f};acc_loss={np.mean(losses):.5f}"))
+
+    # (c): batch interval — fold the same window in chunks of varying size
+    for chunk in (1024, 4096, 16384, 65536):
+        cap = capacity_for_fraction(0.6, ITEMS, 3)
+        fold = make_oasrs_batched(3, cap)
+
+        @jax.jit
+        def run_chunked(values, sids, chunk=chunk):
+            from repro.core import oasrs, query
+            st = oasrs.reset_window(
+                oasrs.init(3, cap, jax.ShapeDtypeStruct((), jnp.float32),
+                           jax.random.PRNGKey(0)))
+            vs = values.reshape(-1, chunk)
+            ss = sids.reshape(-1, chunk)
+
+            def body(s, xs):
+                return oasrs.update_chunk(s, xs[1], xs[0]), None
+            st, _ = jax.lax.scan(body, st, (vs, ss))
+            return query.query_sum(st)
+
+        us = time_call(run_chunked, wins[0].values, wins[0].stratum_ids,
+                       warmup=1, iters=5)
+        rows.append(emit(f"fig5c.oasrs.batch{chunk}", us,
+                         f"items_per_sec={ITEMS / (us / 1e6):.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

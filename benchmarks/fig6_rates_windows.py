@@ -1,0 +1,74 @@
+"""Figure 6: (a) accuracy vs sub-stream-C arrival rate; (b/c) throughput +
+accuracy vs window size."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from benchmarks.systems import all_systems
+from repro.core import error as err
+from repro.stream import GaussianSource, StreamAggregator, skewed
+
+ITEMS = 65_536
+
+
+def run() -> list:
+    rows = []
+    # (a) vary the arrival share of sub-stream C (heaviest values)
+    for c_share in (0.002, 0.01, 0.05, 0.16):
+        rest = 1.0 - c_share
+        agg = StreamAggregator(
+            skewed(GaussianSource(), (0.8 * rest, 0.2 * rest, c_share)),
+            seed=1)
+        wins = [agg.interval_chunk(e, ITEMS) for e in range(4)]
+        systems = all_systems(3, 0.6, ITEMS)
+        for name in ("oasrs_batched", "srs", "sts"):
+            losses = []
+            for w in wins:
+                est = systems[name](w.values, w.stratum_ids)
+                ex = float(jnp.sum(w.values))
+                losses.append(abs(float(est.value) - ex) / abs(ex))
+            rows.append(emit(
+                f"fig6a.{name}.cshare{c_share}", 0.0,
+                f"acc_loss={np.mean(losses):.5f}"))
+
+    # (b)/(c) window sizes: number of merged slide intervals
+    from repro.core import oasrs, query, window
+    SPEC = jnp.zeros(()).dtype
+    import jax
+    for k_intervals in (1, 2, 4, 8):
+        agg = StreamAggregator(
+            skewed(GaussianSource(), (0.6, 0.3, 0.1)), seed=2)
+        w = window.init(k_intervals, 3, 2048,
+                        jax.ShapeDtypeStruct((), jnp.float32),
+                        jax.random.PRNGKey(0))
+
+        @jax.jit
+        def slide_once(w, values, sids):
+            iv = oasrs.init(3, 2048, jax.ShapeDtypeStruct((), jnp.float32),
+                            jax.random.PRNGKey(1))
+            iv = oasrs.update_chunk(iv, sids, values)
+            w = window.slide(w, iv)
+            return w, window.query_sum(w)
+
+        chunk = agg.interval_chunk(0, ITEMS // 4)
+        us = time_call(
+            lambda w=w, c=chunk: slide_once(w, c.values, c.stratum_ids)[1],
+            warmup=1, iters=5)
+        # accuracy over a full window
+        exact = 0.0
+        for e in range(k_intervals):
+            c = agg.interval_chunk(e, ITEMS // 4)
+            w, est = slide_once(w, c.values, c.stratum_ids)
+            exact += float(jnp.sum(c.values))
+        loss = abs(float(est.value) - exact) / abs(exact)
+        rows.append(emit(
+            f"fig6bc.oasrs.window{k_intervals}", us,
+            f"items_per_sec={(ITEMS // 4) / (us / 1e6):.0f};"
+            f"acc_loss={loss:.5f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Figure 8: mean-value estimates per slide interval over an observation
+run (sliding window w=2 intervals), per sampling technique."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.systems import SPEC
+from repro.core import baselines as bl
+from repro.core import error as err
+from repro.core import oasrs, query, window
+from repro.stream import GaussianSource, StreamAggregator, skewed
+
+ITEMS = 16_384
+SLIDES = 12
+
+
+def run() -> list:
+    rows = []
+    agg = StreamAggregator(
+        skewed(GaussianSource(mus=(100.0, 1000.0, 10000.0),
+                              sigmas=(10.0, 100.0, 1000.0)),
+               (0.8, 0.19, 0.01)), seed=8)
+
+    w = window.init(2, 3, 1024, SPEC, jax.random.PRNGKey(0))
+    traces = {"oasrs": [], "srs": [], "sts": [], "exact": []}
+    prev = None
+    for e in range(SLIDES):
+        c = agg.interval_chunk(e, ITEMS)
+        iv = oasrs.init(3, 1024, SPEC, jax.random.PRNGKey(100 + e))
+        iv = oasrs.update_chunk(iv, c.stratum_ids, c.values)
+        w = window.slide(w, iv)
+        traces["oasrs"].append(float(window.query_mean(w).value))
+        # exact + baselines over the same 2-interval window
+        vals = [c.values] if prev is None else [prev.values, c.values]
+        sids = [c.stratum_ids] if prev is None else [prev.stratum_ids,
+                                                     c.stratum_ids]
+        v = jnp.concatenate(vals)
+        s = jnp.concatenate(sids)
+        traces["exact"].append(float(jnp.mean(v)))
+        srs = bl.srs_sample(jax.random.PRNGKey(200 + e), v.shape[0],
+                            int(0.4 * v.shape[0]))
+        traces["srs"].append(float(err.estimate_mean(
+            bl.srs_stats(v, srs)).value))
+        gc = bl.sts_counts(s, 3)
+        sts = bl.sts_sample(jax.random.PRNGKey(300 + e), s, gc, 0.4)
+        traces["sts"].append(float(err.estimate_mean(
+            bl.sample_stats(v, s, sts, 3, gc)).value))
+        prev = c
+
+    exact = np.array(traces["exact"])
+    for name in ("oasrs", "srs", "sts"):
+        tr = np.array(traces[name])
+        rmse = float(np.sqrt(np.mean((tr - exact) ** 2)))
+        rows.append(emit(f"fig8.{name}.mean_trace", 0.0,
+                         f"rmse_vs_exact={rmse:.3f};"
+                         f"rel_rmse={rmse / exact.mean():.5f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

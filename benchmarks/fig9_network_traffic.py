@@ -1,0 +1,46 @@
+"""Figure 9 + 11(left): network-traffic case study (§6.2) — per-protocol
+traffic totals on a CAIDA-like NetFlow replay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from benchmarks.systems import all_systems
+from repro.stream import NetflowSource, StreamAggregator
+
+ITEMS = 65_536
+
+
+def run() -> list:
+    rows = []
+    agg = StreamAggregator(NetflowSource(), seed=9)
+    wins = [agg.interval_chunk(e, ITEMS) for e in range(4)]
+    for frac in (0.6, 0.3, 0.1):
+        systems = all_systems(3, frac, ITEMS)
+        for name, fn in systems.items():
+            if name == "native" and frac != 0.6:
+                continue
+            us = time_call(fn, wins[0].values, wins[0].stratum_ids,
+                           warmup=1, iters=5)
+            losses = []
+            for w in wins:
+                est = fn(w.values, w.stratum_ids)
+                ex = float(jnp.sum(w.values))
+                losses.append(abs(float(est.value) - ex) / abs(ex))
+            rows.append(emit(
+                f"fig9.{name}.frac{int(frac * 100)}", us,
+                f"items_per_sec={ITEMS / (us / 1e6):.0f};"
+                f"acc_loss={np.mean(losses):.5f}"))
+    # fig11-style latency: time to process the whole dataset replay
+    systems = all_systems(3, 0.6, ITEMS)
+    for name in ("oasrs_batched", "srs", "sts"):
+        us = time_call(systems[name], wins[0].values, wins[0].stratum_ids,
+                       warmup=1, iters=5)
+        rows.append(emit(f"fig11.netflow.{name}", us,
+                         f"latency_ms_per_window={us / 1e3:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

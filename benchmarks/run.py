@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``  prints CSV rows
+``name,us_per_call,derived`` for every benchmark (paper figures 5-11 +
+kernel/training-plane benches).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, bench_train, fig5_microbench,
+                            fig6_rates_windows, fig7_scale_skew,
+                            fig8_means_over_time, fig9_network_traffic,
+                            fig10_taxi)
+    modules = [
+        ("fig5(a-c) microbenchmarks", fig5_microbench),
+        ("fig6 arrival rates + windows", fig6_rates_windows),
+        ("fig7 scalability + skew", fig7_scale_skew),
+        ("fig8 means over time", fig8_means_over_time),
+        ("fig9 network traffic case study", fig9_network_traffic),
+        ("fig10 taxi case study", fig10_taxi),
+        ("kernel bench", bench_kernels),
+        ("training-plane bench", bench_train),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, mod in modules:
+        print(f"# --- {title} ---")
+        try:
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""The five systems compared throughout §5/§6, as jitted window programs.
+
+  native          — exact computation over every item (no sampling)
+  oasrs_batched   — StreamApprox, Spark-Streaming mode (chunk fold)
+  oasrs_pipelined — StreamApprox, Flink mode (lane-wise scan fold)
+  srs             — Spark `sample` (random-sort simple random sampling)
+  sts             — Spark `sampleByKeyExact` (2-pass stratified sampling)
+
+Each system returns (estimate, exact-cost proxy); throughput = items/sec of
+the jitted program at saturation (paper §6.1 methodology via stream.replay).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as bl
+from repro.core import error as err
+from repro.core import oasrs, query
+
+SPEC = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def capacity_for_fraction(fraction: float, items: int, strata: int) -> int:
+    return max(int(fraction * items / strata), 4)
+
+
+def make_native(num_strata: int):
+    @jax.jit
+    def run(values, sids):
+        stats = query.exact_stats(values, sids, num_strata)
+        return err.estimate_sum(stats)
+    return run
+
+
+def make_oasrs_batched(num_strata: int, capacity: int, seed: int = 0):
+    state0 = oasrs.init(num_strata, capacity, SPEC,
+                        jax.random.PRNGKey(seed))
+
+    @jax.jit
+    def run(values, sids):
+        st = oasrs.update_chunk(oasrs.reset_window(state0), sids, values)
+        return query.query_sum(st)
+    return run
+
+
+def make_oasrs_pipelined(num_strata: int, capacity: int, lane: int = 256,
+                         seed: int = 0):
+    state0 = oasrs.init(num_strata, capacity, SPEC,
+                        jax.random.PRNGKey(seed))
+
+    @jax.jit
+    def run(values, sids):
+        st = oasrs.update_pipelined_chunks(
+            oasrs.reset_window(state0), sids, values, lane=lane)
+        return query.query_sum(st)
+    return run
+
+
+def make_srs(fraction: float, items: int, seed: int = 0):
+    k = max(int(fraction * items), 4)
+
+    @jax.jit
+    def run(values, sids):
+        s = bl.srs_sample(jax.random.PRNGKey(seed), items, k)
+        return err.estimate_sum(bl.srs_stats(values, s))
+    return run
+
+
+def make_sts(num_strata: int, fraction: float, seed: int = 0):
+    @jax.jit
+    def run(values, sids):
+        gc = bl.sts_counts(sids, num_strata)          # pass 1 (the sync)
+        s = bl.sts_sample(jax.random.PRNGKey(seed), sids, gc, fraction)
+        return err.estimate_sum(
+            bl.sample_stats(values, sids, s, num_strata, gc))
+    return run
+
+
+def all_systems(num_strata: int, fraction: float, items: int,
+                lane: int = 256):
+    cap = capacity_for_fraction(fraction, items, num_strata)
+    return {
+        "native": make_native(num_strata),
+        "oasrs_batched": make_oasrs_batched(num_strata, cap),
+        "oasrs_pipelined": make_oasrs_pipelined(num_strata, cap, lane),
+        "srs": make_srs(fraction, items),
+        "sts": make_sts(num_strata, fraction),
+    }

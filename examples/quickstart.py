@@ -1,0 +1,65 @@
+"""Quickstart: approximate stream analytics in 60 lines.
+
+Samples a skewed 3-sub-stream Gaussian stream with OASRS, answers
+SUM/MEAN/COUNT queries with rigorous error bounds, and shows the adaptive
+feedback loop (paper Algorithm 2).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adaptive, oasrs, query
+from repro.stream import GaussianSource, StreamAggregator, skewed
+
+
+def main():
+    # 1. A stream with three sub-streams (80% / 19% / 1% arrival shares,
+    #    heavy values concentrated in the rare sub-stream).
+    agg = StreamAggregator(skewed(GaussianSource(), (0.8, 0.19, 0.01)),
+                           seed=0)
+
+    # 2. OASRS state: reservoir of 256 per stratum (≈1.2% of the window).
+    state = oasrs.init(num_strata=3, capacity=256,
+                       payload_spec=jax.ShapeDtypeStruct((), jnp.float32),
+                       key=jax.random.PRNGKey(42))
+    fold = jax.jit(oasrs.update_chunk)
+
+    budget = adaptive.accuracy_budget(target_half_width=5.0,
+                                      confidence=0.95)
+
+    for epoch in range(5):
+        chunk = agg.interval_chunk(epoch, 65_536)
+        state = oasrs.reset_window(state)
+        state = fold(state, chunk.stratum_ids, chunk.values)
+
+        s = query.query_sum(state)
+        m = query.query_mean(state)
+        c = query.query_count(state, lambda v: v > 5000.0)
+        exact_sum = float(jnp.sum(chunk.values))
+
+        print(f"window {epoch}: SUM={float(s.value):12.0f} "
+              f"± {float(s.error_bound(0.95)):8.0f} "
+              f"(exact {exact_sum:12.0f})   "
+              f"MEAN={float(m.value):8.2f} ± "
+              f"{float(m.error_bound(0.95)):5.2f}   "
+              f"COUNT(v>5k)={float(c.value):9.0f} "
+              f"± {float(c.error_bound(0.95)):7.0f}")
+
+        # 3. Adaptive feedback: resize next window's reservoirs to hit the
+        #    accuracy budget (Neyman allocation from observed spreads).
+        stats = query.stats(state)
+        new_cap = adaptive.next_capacity(budget, stats, realized=m)
+        state = oasrs.OASRSState(values=state.values, counts=state.counts,
+                                 capacity=jnp.minimum(
+                                     new_cap, state.max_capacity),
+                                 key=state.key)
+        print(f"          adaptive capacities → {new_cap.tolist()} "
+              f"(sampling {float(jnp.sum(jnp.minimum(new_cap, 256))) / 655.36:.1f}% next window)")
+
+
+if __name__ == "__main__":
+    main()

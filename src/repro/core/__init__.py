@@ -1,0 +1,14 @@
+"""StreamApprox core: OASRS sampling, error bounds, queries, baselines."""
+from repro.core import (adaptive, baselines, distributed, error, oasrs,
+                        query, window)
+from repro.core.error import Estimate, StratumStats
+from repro.core.oasrs import (OASRSState, init, reset_window, update_chunk,
+                              update_item, update_pipelined_chunks,
+                              update_stream)
+
+__all__ = [
+    "adaptive", "baselines", "distributed", "error", "oasrs", "query",
+    "window", "Estimate", "StratumStats", "OASRSState", "init",
+    "reset_window", "update_chunk", "update_item",
+    "update_pipelined_chunks", "update_stream",
+]

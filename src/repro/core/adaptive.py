@@ -1,0 +1,80 @@
+"""Adaptive execution: query budget → sample size — paper §2.3/§4.2/§7.
+
+The paper assumes a "virtual cost function" translating a query budget
+(latency / throughput / resources / accuracy) into sample sizes, plus a
+feedback mechanism that enlarges the sample when the realized error bound
+exceeds the target. Both are implemented here:
+
+* accuracy budget   → closed-form Neyman allocation (``error.required_…``),
+* throughput budget → items/sec ÷ per-item cost model → total reservoir size,
+* feedback          → multiplicative-increase / additive-decrease controller
+  on the capacity vector, clamped to ``[min, N_max]``.
+
+All controller math is pure jnp so the feedback loop can live inside the
+jitted window program (no host round-trip between windows).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import error as err
+from repro.utils import dataclass_pytree
+
+
+@dataclass_pytree
+@dataclasses.dataclass
+class BudgetConfig:
+    """Static budget description (one of the three budget kinds)."""
+    target_half_width: jax.Array     # accuracy budget: CI half-width target
+    z: jax.Array                     # confidence multiplier (1/2/3)
+    min_per_stratum: jax.Array       # floor so tiny strata are never dropped
+    max_per_stratum: jax.Array       # reservoir allocation N_max
+
+
+def accuracy_budget(target_half_width: float, confidence: float = 0.95,
+                    min_per_stratum: int = 8,
+                    max_per_stratum: int = 4096) -> BudgetConfig:
+    z = err.Z_FOR_CONFIDENCE[confidence]
+    return BudgetConfig(
+        target_half_width=jnp.float32(target_half_width),
+        z=jnp.float32(z),
+        min_per_stratum=jnp.int32(min_per_stratum),
+        max_per_stratum=jnp.int32(max_per_stratum))
+
+
+def throughput_budget_capacity(
+    items_per_interval: float, sampling_fraction: float, num_strata: int,
+    min_per_stratum: int = 8) -> jax.Array:
+    """Throughput/resource budget: fraction of the arriving window we can
+    afford to process → uniform per-stratum capacities (§7-I token model:
+    each item costs one token; the budget buys ``fraction × arrivals``)."""
+    total = int(items_per_interval * sampling_fraction)
+    per = max(total // max(num_strata, 1), min_per_stratum)
+    return jnp.full((num_strata,), per, jnp.int32)
+
+
+def next_capacity(budget: BudgetConfig, stats: err.StratumStats,
+                  realized: Optional[err.Estimate] = None) -> jax.Array:
+    """One feedback step: capacities for the NEXT window.
+
+    Primary term: Neyman allocation from the last window's observed
+    ``(C_i, s_i²)`` for the accuracy target. Secondary term (paper §4.2's
+    feedback): if the *realized* error bound still exceeded the target —
+    e.g. because arrival rates shifted mid-window — multiply capacities by
+    the squared violation ratio (variance ∝ 1/N).
+    """
+    alloc = err.required_sample_size_mean(
+        stats.counts, stats.s2(), budget.target_half_width, budget.z,
+        min_per_stratum=1)
+    if realized is not None:
+        bound = budget.z * jnp.sqrt(jnp.maximum(realized.variance, 0.0))
+        ratio = bound / jnp.maximum(budget.target_half_width, 1e-20)
+        scale = jnp.clip(ratio * ratio, 1.0, 8.0)
+        grow = jnp.ceil(alloc.astype(jnp.float32) * scale).astype(jnp.int32)
+        alloc = jnp.where(bound > budget.target_half_width, grow, alloc)
+    alloc = jnp.maximum(alloc, budget.min_per_stratum)
+    return jnp.minimum(alloc, budget.max_per_stratum)

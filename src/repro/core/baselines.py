@@ -1,0 +1,169 @@
+"""Baseline sampling systems the paper compares against — §4.1, §5.
+
+* ``native``  — no sampling: exact window statistics.
+* ``srs``     — Spark's Simple Random Sampling (``sample``): random-sort
+  selection with the two-threshold (p, q) pruning trick of Meng (ICML'13).
+* ``sts``     — Spark's Stratified Sampling (``sampleByKey[Exact]``):
+  per-stratum proportional sampling. Pass 1 needs the *global* per-stratum
+  counts (the synchronization barrier the paper criticizes — realized as an
+  ``all-reduce`` in the distributed wrapper), pass 2 random-sorts within each
+  stratum. Its compiled HLO exhibits exactly the extra sort + collective the
+  paper blames for STS's poor scaling.
+
+All samplers return ``(selected_mask, weights_per_item)`` over the window so
+that downstream weighted aggregation is shared with OASRS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import error as err
+from repro.utils import bincount, dataclass_pytree
+
+
+@dataclass_pytree
+@dataclasses.dataclass
+class WindowSample:
+    """A per-window sample over a raw buffer of ``M`` items."""
+    mask: jax.Array       # [M] bool — item selected
+    weights: jax.Array    # [M] f32  — HT weight of each selected item
+
+
+# ---------------------------------------------------------------------------
+# Simple Random Sampling (Spark `sample`) — random sort with (p, q) pruning.
+# ---------------------------------------------------------------------------
+
+def srs_sample(key: jax.Array, num_items: int, k: int,
+               mask: Optional[jax.Array] = None,
+               gap: float = 2.0) -> WindowSample:
+    """Select ``k`` of ``num_items`` by random sort (§4.1.1).
+
+    Spark's ScaSRS trick: draw ``u_j ~ U[0,1]``; accept ``u < p`` outright,
+    discard ``u > q``, sort only the (p, q) band. With
+    ``p = k/M − gap·σ`` and ``q = k/M + gap·σ`` the band is ``O(√(k log M))``
+    items w.h.p. We realize the same selection with a single ``top_k`` over
+    keys clamped outside the band (XLA's top_k over the pruned band is the
+    moral equivalent; the full sort never materializes).
+    """
+    if mask is None:
+        mask = jnp.ones((num_items,), jnp.bool_)
+    u = jax.random.uniform(key, (num_items,))
+    m = jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1).astype(jnp.float32)
+    frac = jnp.minimum(k / m, 1.0)
+    sigma = jnp.sqrt(frac * (1.0 - frac) / m)
+    p = jnp.maximum(frac - gap * sigma, 0.0)
+    q = jnp.minimum(frac + gap * sigma, 1.0)
+    # Clamp outside the (p, q) band so top_k only really orders the band:
+    # sure-accepts collapse to 0, sure-rejects to 1.
+    u_band = jnp.where(u <= p, 0.0, jnp.where(u > q, 1.0, u))
+    u_band = jnp.where(mask, u_band, jnp.inf)
+    kk = min(k, num_items)
+    _, idx = jax.lax.top_k(-u_band, kk)
+    sel = jnp.zeros((num_items,), jnp.bool_).at[idx].set(True) & mask
+    n_sel = jnp.maximum(jnp.sum(sel.astype(jnp.int32)), 1).astype(jnp.float32)
+    w = jnp.where(sel, m / n_sel, 0.0)
+    return WindowSample(mask=sel, weights=w)
+
+
+# ---------------------------------------------------------------------------
+# Stratified Sampling (Spark `sampleByKeyExact`) — 2-pass, synchronizing.
+# ---------------------------------------------------------------------------
+
+def sts_counts(stratum_ids: jax.Array, num_strata: int,
+               mask: Optional[jax.Array] = None) -> jax.Array:
+    """Pass 1: per-stratum counts. In the distributed wrapper this is the
+    ``psum`` synchronization barrier (every worker must finish counting the
+    window before ANY worker may start sampling)."""
+    if mask is None:
+        return bincount(stratum_ids, num_strata)
+    sid = jnp.where(mask, stratum_ids, num_strata)
+    return bincount(sid, num_strata + 1)[:num_strata]
+
+
+def sts_sample(key: jax.Array, stratum_ids: jax.Array,
+               global_counts: jax.Array, fraction: float,
+               mask: Optional[jax.Array] = None) -> WindowSample:
+    """Pass 2: take exactly ``⌈fraction · C_i⌉`` items of each stratum.
+
+    Implementation mirrors ``sampleByKeyExact``: items are random-sorted
+    *within* each stratum (lexsort by (stratum, u) — the expensive sort the
+    paper measures) and the first ``n_i`` of each group are selected.
+    ``global_counts`` must come from :func:`sts_counts` (possibly psummed),
+    which is what makes this a synchronizing two-pass algorithm.
+    """
+    m = stratum_ids.shape[0]
+    num_strata = global_counts.shape[0]
+    if mask is None:
+        mask = jnp.ones((m,), jnp.bool_)
+    targets = jnp.ceil(
+        fraction * global_counts.astype(jnp.float32)).astype(jnp.int32)
+
+    u = jax.random.uniform(key, (m,))
+    u = jnp.where(mask, u, jnp.inf)
+    sid = jnp.where(mask, stratum_ids, num_strata).astype(jnp.int32)
+    # Random-sort within stratum: rank of u among items of the same stratum.
+    order = jnp.lexsort((u, sid))
+    sid_sorted = sid[order]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sid_sorted[1:] != sid_sorted[:-1]])
+    group_start = jnp.maximum.accumulate(jnp.where(is_start, idx, 0))
+    rank_sorted = idx - group_start
+    rank = jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)
+
+    local_target = targets[jnp.minimum(sid, num_strata - 1)]
+    sel = mask & (rank < local_target)
+    # HT weight per stratum: C_i / n_i_selected.
+    sel_per = bincount(jnp.where(sel, sid, num_strata), num_strata + 1)
+    sel_per = sel_per[:num_strata]
+    w_str = global_counts.astype(jnp.float32) / jnp.maximum(
+        sel_per, 1).astype(jnp.float32)
+    w = jnp.where(sel, w_str[jnp.minimum(sid, num_strata - 1)], 0.0)
+    return WindowSample(mask=sel, weights=w)
+
+
+# ---------------------------------------------------------------------------
+# Weighted window statistics shared by SRS/STS paths.
+# ---------------------------------------------------------------------------
+
+def srs_stats(values: jax.Array, sample: WindowSample) -> err.StratumStats:
+    """Stats for SRS error estimation: the whole window is ONE stratum.
+
+    SRS has no stratification, so its honest variance is the single-stratum
+    Eq. 6 (which is large when a rare stratum carries heavy values — the
+    effect Figures 5b/7c measure). Feeding SRS samples through per-stratum
+    accounting would *understate* its error.
+    """
+    m = values.shape[0]
+    return sample_stats(values, jnp.zeros((m,), jnp.int32), sample,
+                        num_strata=1)
+
+
+def sample_stats(values: jax.Array, stratum_ids: jax.Array,
+                 sample: WindowSample, num_strata: int,
+                 global_counts: Optional[jax.Array] = None
+                 ) -> err.StratumStats:
+    """Per-stratum stats of a mask-selected sample (for SRS/STS queries).
+
+    ``counts`` are the true per-stratum sizes when supplied (STS knows them
+    from pass 1); otherwise they are HT-estimated from the weights (SRS does
+    not know per-stratum sizes — precisely why it can overlook small strata).
+    """
+    sel = sample.mask
+    sid = jnp.where(sel, stratum_ids, num_strata).astype(jnp.int32)
+    x = jnp.where(sel, values, 0.0).astype(jnp.float32)
+    taken = bincount(sid, num_strata + 1)[:num_strata]
+    sums = jnp.zeros((num_strata,), jnp.float32).at[sid].add(
+        jnp.where(sel, x, 0.0))
+    sumsqs = jnp.zeros((num_strata,), jnp.float32).at[sid].add(
+        jnp.where(sel, x * x, 0.0))
+    if global_counts is None:
+        est = jnp.zeros((num_strata,), jnp.float32).at[sid].add(
+            jnp.where(sel, sample.weights, 0.0))
+        global_counts = jnp.round(est).astype(jnp.int32)
+    return err.StratumStats(counts=global_counts, taken=taken, sums=sums,
+                            sumsqs=sumsqs)

@@ -1,0 +1,111 @@
+"""Distributed OASRS execution — paper §3.2 "Distributed execution".
+
+Design (mapped from the paper's w-worker scheme to an SPMD mesh):
+
+* Each shard along the ``data`` (and ``pod``) mesh axes owns a *local*
+  OASRS state: reservoirs of size ``N_i / w`` and local counters. The
+  ingestion path (``local_update``) contains **zero collectives** — this is
+  the paper's "no synchronization among workers" property, checkable in the
+  compiled HLO (``tests/test_distributed.py`` asserts the update program has
+  no all-reduce).
+* A query performs ONE ``psum`` of O(strata) scalars at window close: each
+  (worker × stratum) cell is an independently-sampled stratum, so partial
+  estimates and partial variances both sum exactly (Eq. 5).
+* Straggler mitigation / elasticity (beyond-paper, DESIGN.md §3.4): a shard
+  that misses the window deadline contributes ``alive = 0``; surviving
+  partials are inflated by ``w_total / w_alive``. Because the stream
+  aggregator round-robins items across shards, shard loads are exchangeable
+  and the inflated estimator stays unbiased — only variance grows, which the
+  error bound reports honestly.
+
+These helpers are written to be called INSIDE ``shard_map``; they take the
+mesh axis name(s) the stream is partitioned over.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import error as err
+from repro.core import oasrs
+
+AxisNames = Union[str, Sequence[str]]
+
+
+def _psum(x, axis_names: AxisNames):
+    return jax.lax.psum(x, axis_names)
+
+
+def local_update(state: oasrs.OASRSState, stratum_ids: jax.Array,
+                 payload, mask=None) -> oasrs.OASRSState:
+    """Per-shard ingestion — intentionally just the local chunk fold.
+
+    Named separately to make the no-collective property a grep-able,
+    testable contract of the module.
+    """
+    return oasrs.update_chunk(state, stratum_ids, payload, mask)
+
+
+def global_sum(local_stats: err.StratumStats, axis_names: AxisNames,
+               alive: Optional[jax.Array] = None) -> err.Estimate:
+    """Merge per-shard partial SUM estimates with one psum.
+
+    ``alive``: scalar 0/1 per shard (1 = met the window deadline).
+    """
+    local = err.estimate_sum(local_stats)
+    return _merge_partials(local, axis_names, alive)
+
+
+def global_mean(local_stats: err.StratumStats, axis_names: AxisNames,
+                alive: Optional[jax.Array] = None) -> err.Estimate:
+    """Merge per-shard partials into the global MEAN estimate.
+
+    MEAN = SUM / ΣC needs the global item count; both numerator and
+    denominator ride the same psum (still one fused collective).
+    """
+    local_sum = err.estimate_sum(local_stats)
+    local_count = jnp.sum(local_stats.counts).astype(jnp.float32)
+    if alive is None:
+        alive = jnp.float32(1.0)
+    a = alive.astype(jnp.float32)
+    num, var, cnt, n_alive, n_total = _psum(
+        (a * local_sum.value, a * a * local_sum.variance, a * local_count,
+         a, jnp.float32(1.0)), axis_names)
+    inflate = n_total / jnp.maximum(n_alive, 1.0)
+    total = jnp.maximum(cnt * inflate, 1.0)
+    # Var(MEAN) = Var(SUM)/totalᒾ for the stratified estimator (ω_i fold-in).
+    return err.Estimate(value=num * inflate / total,
+                        variance=var * inflate * inflate / (total * total))
+
+
+def _merge_partials(local: err.Estimate, axis_names: AxisNames,
+                    alive: Optional[jax.Array]) -> err.Estimate:
+    if alive is None:
+        alive = jnp.float32(1.0)
+    a = alive.astype(jnp.float32)
+    val, var, n_alive, n_total = _psum(
+        (a * local.value, a * a * local.variance, a, jnp.float32(1.0)),
+        axis_names)
+    inflate = n_total / jnp.maximum(n_alive, 1.0)
+    # Dropping shards multiplies the estimator by w/w_alive: the variance of
+    # the inflated estimator picks up inflate² on the surviving partials.
+    return err.Estimate(value=val * inflate,
+                        variance=var * inflate * inflate)
+
+
+def sts_global_counts(local_counts: jax.Array,
+                      axis_names: AxisNames) -> jax.Array:
+    """The STS baseline's pass-1 synchronization barrier (all-reduce).
+
+    Exists so benchmarks can contrast the collective footprint of STS
+    against the collective-free OASRS ingestion path.
+    """
+    return _psum(local_counts, axis_names)
+
+
+def split_capacity(total_capacity: jax.Array, num_shards: int) -> jax.Array:
+    """Per-worker reservoir size ``N_i / w`` (ceil so Σ ≥ N_i)."""
+    return jnp.maximum(
+        (total_capacity + num_shards - 1) // num_shards, 1).astype(jnp.int32)

@@ -1,0 +1,125 @@
+"""Approximate linear queries over OASRS samples — paper §3.2/§3.3.
+
+Every query is a weighted (Horvitz–Thompson) estimator built from the fused
+per-stratum statistics pass, returning an :class:`~repro.core.error.Estimate`
+(``value ± error bound``). Supported: SUM, MEAN, COUNT, HISTOGRAM, and
+arbitrary per-stratum linear forms via ``query_linear`` — covering the
+paper's "any type of approximate linear query" claim.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import error as err
+from repro.core.oasrs import OASRSState
+from repro.utils import Pytree
+
+Extract = Callable[[Pytree], jax.Array]
+
+
+def _reservoir_values(state: OASRSState, extract: Extract) -> jax.Array:
+    xs = extract(state.values)
+    if xs.shape[:2] != (state.num_strata, state.max_capacity):
+        raise ValueError(
+            f"extract must return [S, N_max]-leading array, got {xs.shape}")
+    return xs
+
+
+def stats(state: OASRSState, extract: Extract = lambda v: v,
+          transform: Optional[Callable[[jax.Array], jax.Array]] = None
+          ) -> err.StratumStats:
+    """One fused pass → per-stratum (C_i, Y_i, Σx, Σx²).
+
+    ``transform`` maps item values before aggregation (e.g. a predicate
+    indicator for COUNT queries). Uses the Pallas ``stratified_stats`` kernel
+    when enabled (see ``repro.kernels.ops``), else the pure-jnp path.
+    """
+    xs = _reservoir_values(state, extract)
+    if transform is not None:
+        xs = transform(xs)
+    return err.stratum_stats_from_sample(
+        xs, state.counts, state.taken(), state.slot_mask())
+
+
+def query_sum(state: OASRSState, extract: Extract = lambda v: v
+              ) -> err.Estimate:
+    """Approximate SUM over the full stream (Eqs. 2, 3, 6)."""
+    return err.estimate_sum(stats(state, extract))
+
+
+def query_mean(state: OASRSState, extract: Extract = lambda v: v
+               ) -> err.Estimate:
+    """Approximate MEAN over the full stream (Eqs. 4, 8, 9)."""
+    return err.estimate_mean(stats(state, extract))
+
+
+def query_count(state: OASRSState,
+                predicate: Callable[[jax.Array], jax.Array],
+                extract: Extract = lambda v: v) -> err.Estimate:
+    """Approximate COUNT of items satisfying ``predicate``.
+
+    A COUNT is the SUM of the 0/1 indicator — a linear query, so Eq. 6
+    applies to the indicator values directly.
+    """
+    return err.estimate_sum(
+        stats(state, extract,
+              transform=lambda x: predicate(x).astype(jnp.float32)))
+
+
+def query_histogram(state: OASRSState, edges: jax.Array,
+                    extract: Extract = lambda v: v) -> err.Estimate:
+    """Approximate weighted histogram: per-bin COUNT estimates.
+
+    Returns an Estimate whose ``value``/``variance`` are ``[num_bins]``
+    vectors (each bin is an independent linear query on its indicator).
+    """
+    num_bins = edges.shape[0] - 1
+
+    def one_bin(lo, hi, last):
+        in_bin = lambda x: (x >= lo) & jnp.where(last, x <= hi, x < hi)
+        return query_count(state, in_bin, extract)
+
+    ests = [one_bin(edges[b], edges[b + 1], b == num_bins - 1)
+            for b in range(num_bins)]
+    return err.Estimate(value=jnp.stack([e.value for e in ests]),
+                        variance=jnp.stack([e.variance for e in ests]))
+
+
+def query_linear(state: OASRSState,
+                 fn: Callable[[jax.Array], jax.Array],
+                 extract: Extract = lambda v: v) -> err.Estimate:
+    """Generic linear query ``Σ_items fn(x)`` with Eq. 6 error bounds."""
+    return err.estimate_sum(stats(state, extract, transform=fn))
+
+
+def group_means(state: OASRSState, extract: Extract = lambda v: v
+                ) -> err.Estimate:
+    """Per-stratum MEAN (the taxi case study: avg distance per borough).
+
+    Within one stratum the estimator reduces to the plain sample mean with
+    the single-stratum Eq. 9 variance.
+    """
+    st = stats(state, extract)
+    y = jnp.maximum(st.taken, 1).astype(jnp.float32)
+    c = jnp.maximum(st.counts, 1).astype(jnp.float32)
+    var = st.s2() / y * jnp.maximum(
+        c - st.taken.astype(jnp.float32), 0.0) / c
+    return err.Estimate(value=st.mean(), variance=var)
+
+
+def exact_stats(values: jax.Array, stratum_ids: jax.Array, num_strata: int,
+                mask: Optional[jax.Array] = None) -> err.StratumStats:
+    """Ground-truth per-stratum stats of a raw window (native baseline)."""
+    if mask is None:
+        mask = jnp.ones(values.shape, jnp.bool_)
+    m = mask.astype(jnp.float32)
+    v = values.astype(jnp.float32) * m
+    counts = jnp.zeros((num_strata,), jnp.int32).at[stratum_ids].add(
+        mask.astype(jnp.int32))
+    sums = jnp.zeros((num_strata,), jnp.float32).at[stratum_ids].add(v)
+    sumsqs = jnp.zeros((num_strata,), jnp.float32).at[stratum_ids].add(v * v)
+    return err.StratumStats(counts=counts, taken=counts, sums=sums,
+                            sumsqs=sumsqs)

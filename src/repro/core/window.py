@@ -1,0 +1,109 @@
+"""Sliding-window computation — paper §2.2/§3.1.
+
+Time-based windows of length ``w`` sliding by ``δ``: the window holds
+``K = ceil(w/δ)`` *intervals*; each interval owns an independent OASRS state
+(the paper samples per interval and the windowed query merges the intervals).
+Merging is exact for the estimators because disjoint (interval × stratum)
+cells are independently-sampled strata (Eq. 5 — variances add).
+
+The ring buffer is a stacked pytree so the whole windowed computation jits
+and scans; eviction is O(1) (cursor overwrite), matching a production stream
+processor's pane-based window maintenance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import error as err
+from repro.core import oasrs
+from repro.utils import Pytree, dataclass_pytree
+
+
+@dataclass_pytree
+@dataclasses.dataclass
+class WindowState:
+    """Ring of ``K`` per-interval OASRS states (stacked on axis 0)."""
+    intervals: oasrs.OASRSState   # leaves stacked: [K, ...]
+    cursor: jax.Array             # () int32 — next slot to overwrite
+    filled: jax.Array             # () int32 — number of live intervals
+
+
+def init(num_intervals: int, num_strata: int, capacity, payload_spec: Pytree,
+         key: jax.Array, max_capacity: Optional[int] = None) -> WindowState:
+    keys = jax.random.split(key, num_intervals)
+    states = jax.vmap(
+        lambda k: oasrs.init(num_strata, capacity, payload_spec, k,
+                             max_capacity=max_capacity))(keys)
+    return WindowState(intervals=states,
+                       cursor=jnp.zeros((), jnp.int32),
+                       filled=jnp.zeros((), jnp.int32))
+
+
+def slide(window: WindowState, fresh: oasrs.OASRSState) -> WindowState:
+    """Advance one slide step: evict the oldest interval, insert ``fresh``."""
+    k = window.cursor
+    intervals = jax.tree.map(
+        lambda ring, new: jax.lax.dynamic_update_index_in_dim(
+            ring, new, k, axis=0),
+        window.intervals, fresh)
+    num = jax.tree_util.tree_leaves(window.intervals)[0].shape[0]
+    return WindowState(
+        intervals=intervals,
+        cursor=(k + 1) % num,
+        filled=jnp.minimum(window.filled + 1, num),
+    )
+
+
+def interval_capacity(window: WindowState) -> jax.Array:
+    """Capacity vector of the current insert slot (for the adaptive loop)."""
+    return window.intervals.capacity[window.cursor]
+
+
+def with_capacity(window: WindowState, capacity: jax.Array) -> WindowState:
+    """Set every interval's per-stratum capacity (adaptive feedback)."""
+    k = window.intervals.capacity.shape[0]
+    intervals = dataclasses.replace(
+        window.intervals,
+        capacity=jnp.broadcast_to(capacity[None, :],
+                                  window.intervals.capacity.shape))
+    return dataclasses.replace(window, intervals=intervals)
+
+
+def window_stats(window: WindowState,
+                 extract: Callable[[Pytree], jax.Array] = lambda v: v,
+                 transform=None) -> err.StratumStats:
+    """Fused stats over all live intervals, flattened to (K·S) strata.
+
+    Dead (not yet filled) intervals have zero counts and thus contribute
+    nothing — no branching needed inside jit.
+    """
+    k = jax.tree_util.tree_leaves(window.intervals)[0].shape[0]
+    age = (jnp.arange(k, dtype=jnp.int32) - window.cursor) % jnp.maximum(k, 1)
+    live = age >= (k - window.filled)        # the `filled` most recent slots
+
+    def one(state, is_live):
+        from repro.core import query as q
+        st = q.stats(state, extract, transform)
+        zero = jnp.zeros_like(st.counts)
+        return err.StratumStats(
+            counts=jnp.where(is_live, st.counts, zero),
+            taken=jnp.where(is_live, st.taken, zero),
+            sums=jnp.where(is_live, st.sums, 0.0),
+            sumsqs=jnp.where(is_live, st.sumsqs, 0.0))
+
+    per = jax.vmap(one)(window.intervals, live)
+    return err.StratumStats(
+        counts=per.counts.reshape(-1), taken=per.taken.reshape(-1),
+        sums=per.sums.reshape(-1), sumsqs=per.sumsqs.reshape(-1))
+
+
+def query_sum(window: WindowState, extract=lambda v: v) -> err.Estimate:
+    return err.estimate_sum(window_stats(window, extract))
+
+
+def query_mean(window: WindowState, extract=lambda v: v) -> err.Estimate:
+    return err.estimate_mean(window_stats(window, extract))

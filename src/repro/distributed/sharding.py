@@ -1,0 +1,219 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Model code annotates tensors with *logical* axis names; a rules table maps
+them to physical mesh axes at launch time. This keeps model definitions
+mesh-agnostic: the same transformer lowers for (data=16, model=16), the
+multi-pod (pod=2, data=16, model=16), or a 1-device CPU smoke mesh.
+
+Divisibility-aware: a logical axis is only mapped when the tensor dim is
+divisible by the mesh-axis size (e.g. llama3-405B's 8 KV heads cannot shard
+over model=16 and are transparently replicated). This is decided per-tensor
+at annotation time, which is what lets one rule set serve all 10 archs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, tuple]
+
+#: Default logical→physical rules. Order matters for tuples: the first
+#: mesh axis that divides the dim wins (others appended if they also fit).
+DEFAULT_RULES: dict = {
+    "batch": ("pod", "data"),       # DP over pods × data
+    "seq": None,                    # sequence kept local by default
+    "seq_sp": "model",              # sequence parallelism (opt-in)
+    "embed": None,                  # activations: d_model replicated
+    # Weights' d_model dim is NEVER model-sharded: that would be
+    # contracting-dim (row-parallel-everywhere) sharding, i.e. one
+    # activation-sized psum per matmul (measured: 88s collective term on
+    # phi4 — EXPERIMENTS.md §Perf iteration 2). Megatron pattern instead:
+    # shard the OUTPUT dim of the in-projection (col-parallel) and the
+    # INPUT dim of the out-projection (row-parallel) → one psum per block.
+    "embed_tp": None,
+    "q_heads": "model",             # TP over attention heads
+    "kv_heads": "model",            # TP over KV heads (when divisible)
+    "q_group": "model",             # TP over the GQA group dim (fallback 1)
+    "head_dim_tp": None,            # reserved (feature-sharded attention)
+    "attn_seq": None,               # sequence-parallel attention (fallback 2)
+    "kv_seq": None,                 # decode: flash-decode cache sharding
+    "seq_res": None,                # Megatron-SP residual stream (opt-in)
+    "head_dim": None,
+    "mlp": "model",                 # TP over FFN hidden
+    "vocab": "model",               # TP over vocab (embeds + logits)
+    "experts": "model",             # EP over experts
+    "expert_mlp": None,             # within-expert hidden
+    "moe_group": ("pod", "data", "model"),  # dispatch groups: every device
+                                    # owns whole groups, so routing/sort/
+                                    # scatter run fully partitioned and the
+                                    # expert exchange is a true all-to-all
+    "layers": None,                 # scan axis — never sharded
+    "rnn": "model",                 # recurrent width (RG-LRU, xLSTM)
+    "kv_seq": None,                 # KV-cache sequence axis
+    "frames": None,                 # audio/vision frontend positions
+    "stack": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh + rules for model annotations (and ``jax.jit``)."""
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES) if rules is None else dict(rules)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def build_rules(cfg, mesh: Optional[Mesh]) -> dict:
+    """Pick the attention TP mode for one arch × mesh (DESIGN.md §6).
+
+    Exactly ONE of {kv_heads, q_group, attn_seq} maps to ``model`` so Q and
+    K shard consistently:
+      1. ``kv_heads`` divisible by TP → classic Megatron head sharding
+         (seamless: 16 KV heads);
+      2. GQA group ``G = Hq/Hkv`` divisible → shard Q's group dim, KV
+         replicated (llama3-405B kv=8 G=16; granite-34b kv=1 G=48);
+      3. otherwise → sequence-parallel attention (phi4: 24 heads, G=3):
+         Q's sequence axis shards over ``model``, K/V replicate, the
+         attention runs one query block over scanned KV blocks (≤2× score
+         FLOPs vs exact-causal chunking — scores are a few % of total).
+    Without a mode, GSPMD replicates indivisible-head attention across the
+    model axis (measured 4.8× total-FLOPs inflation — EXPERIMENTS.md §Perf).
+
+    Decode: the KV cache's sequence axis shards over ``model`` in modes 2/3
+    (flash-decode — partitions the bandwidth-bound cache read), the head
+    axis in mode 1.
+    """
+    rules = dict(DEFAULT_RULES)
+    if mesh is None or "model" not in getattr(mesh, "shape", {}):
+        return rules
+    if getattr(cfg, "pure_dp", False):
+        # Small-model mode (§Perf iteration 10): no tensor parallelism at
+        # all — batch shards over every mesh axis, weights replicate, and
+        # the only collectives are the ZeRO gradient/param exchanges.
+        for k in ("embed_tp", "q_heads", "kv_heads", "q_group",
+                  "head_dim_tp", "attn_seq", "mlp", "vocab", "experts",
+                  "expert_mlp", "rnn", "kv_seq", "seq_res"):
+            rules[k] = None
+        rules["batch"] = ("pod", "data", "model")
+        rules["moe_group"] = ("pod", "data", "model")
+        return rules
+    tp = mesh.shape["model"]
+    hkv = max(cfg.num_kv_heads, 1)
+    g = max(cfg.num_heads // hkv, 1)
+    rules["kv_heads"] = None
+    rules["q_group"] = None
+    rules["attn_seq"] = None
+    if hkv % tp == 0:
+        rules["kv_heads"] = "model"
+        rules["kv_seq"] = None
+    elif g % tp == 0:
+        rules["q_group"] = "model"
+        rules["kv_seq"] = "model"
+    else:
+        rules["attn_seq"] = "model"
+        rules["kv_seq"] = "model"
+    # Megatron-SP residual stream (opt-in per config, §Perf):
+    if getattr(cfg, "sp_residual", False):
+        rules["seq_res"] = "model"
+    # MoE: EP over `model` when the expert count divides; otherwise shard
+    # the within-expert hidden dim (granite-moe: 40 experts ∤ 16 — without
+    # this the expert stack REPLICATES and the dispatch all-gathers
+    # per-layer buffers: measured 755 GB/layer/device, §Perf iteration 4).
+    if getattr(cfg, "num_experts", 0):
+        if cfg.num_experts % tp == 0:
+            rules["experts"] = "model"
+            rules["expert_mlp"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_mlp"] = "model"
+    return rules
+
+
+def get_rule(name: str):
+    """The active physical mapping of one logical axis (None if inactive)."""
+    return _CTX.rules.get(name)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def resolve_spec(logical: Sequence[Logical], shape: Sequence[int],
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[dict] = None) -> P:
+    """Map logical axis names to a PartitionSpec, dropping non-divisible
+    or unavailable mesh axes per-dim."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P(*([None] * len(logical)))
+    used: set = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        if name is None:
+            out.append(None)
+            continue
+        phys = rules.get(name)
+        if phys is None:
+            out.append(None)
+            continue
+        cand = phys if isinstance(phys, tuple) else (phys,)
+        picked = []
+        size = 1
+        for ax in cand:
+            if ax in used or ax not in mesh.shape:
+                continue
+            if dim % (size * mesh.shape[ax]) == 0:
+                picked.append(ax)
+                size *= mesh.shape[ax]
+        if picked:
+            used.update(picked)
+            out.append(tuple(picked) if len(picked) > 1 else picked[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: Logical) -> jax.Array:
+    """``with_sharding_constraint`` by logical names; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = resolve_spec(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical: Sequence[Logical], shape: Sequence[int],
+                   mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(logical, shape, mesh))

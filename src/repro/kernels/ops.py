@@ -1,0 +1,59 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body on CPU); on TPU set ``REPRO_PALLAS_COMPILE=1`` to
+lower them for real. ``use_pallas=False`` falls back to the pure-jnp
+reference path (used by default inside big jitted programs where the
+interpreter would be slow).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.oasrs import OASRSState
+from repro.kernels import ref
+from repro.kernels.reservoir import reservoir_fold
+from repro.kernels.stratified_stats import stratified_stats
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def stratum_moments(values: jax.Array, stratum_ids: jax.Array,
+                    num_strata: int, mask: Optional[jax.Array] = None,
+                    use_pallas: bool = True, block_m: int = 1024):
+    """Fused per-stratum (count, Σx, Σx²) — kernel-backed when enabled."""
+    if mask is None:
+        mask = jnp.ones(values.shape, jnp.bool_)
+    if use_pallas:
+        return stratified_stats(values, stratum_ids, mask, num_strata,
+                                block_m=block_m, interpret=_interpret())
+    return ref.stratified_stats_ref(values, stratum_ids, mask, num_strata)
+
+
+def oasrs_fold(state: OASRSState, stratum_ids: jax.Array,
+               payload: jax.Array, mask: Optional[jax.Array] = None,
+               block_m: int = 512) -> OASRSState:
+    """Kernel-backed OASRS chunk fold for scalar payloads.
+
+    Equivalent in distribution to :func:`repro.core.oasrs.update_chunk`
+    (bit-equal to the Algorithm-1 oracle given the same uniforms).
+    """
+    import dataclasses
+    m = stratum_ids.shape[0]
+    if mask is None:
+        mask = jnp.ones((m,), jnp.bool_)
+    key, k_u, k_slot = jax.random.split(state.key, 3)
+    u_accept = jax.random.uniform(k_u, (m,))
+    u_slot = jax.random.uniform(k_slot, (m,))
+    new_values, new_counts = reservoir_fold(
+        stratum_ids, payload, u_accept, u_slot, mask,
+        state.counts, state.capacity, state.values,
+        block_m=block_m, interpret=_interpret())
+    return dataclasses.replace(state, values=new_values, counts=new_counts,
+                               key=key)

@@ -1,0 +1,53 @@
+"""Pure-jnp (and pure-Python) oracles for the Pallas kernels.
+
+``tests/test_kernels.py`` sweeps shapes/dtypes and asserts the kernels
+(interpret mode) match these exactly; the Python reservoir oracle is the
+literal Algorithm 1 from the paper, used for sequential-semantics
+equivalence tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def stratified_stats_ref(values, stratum_ids, mask, num_strata: int):
+    """Per-stratum (count, Σx, Σx²) — oracle for the stats kernel."""
+    m = mask.astype(jnp.float32)
+    x = values.astype(jnp.float32) * m
+    counts = jnp.zeros((num_strata,), jnp.float32).at[stratum_ids].add(m)
+    sums = jnp.zeros((num_strata,), jnp.float32).at[stratum_ids].add(x)
+    sumsqs = jnp.zeros((num_strata,), jnp.float32).at[stratum_ids].add(
+        x * x * m)
+    return counts, sums, sumsqs
+
+
+def reservoir_fold_ref(stratum_ids, payload, u_accept, u_slot, mask,
+                       counts, capacity, values):
+    """Item-at-a-time reservoir fold (numpy) — the literal Algorithm 1.
+
+    Consumes the same pre-drawn uniforms as the kernel, so outputs must be
+    bit-identical, proving the kernel's sequential semantics.
+    """
+    values = np.array(values)
+    counts = np.array(counts)
+    capacity = np.asarray(capacity)
+    sid = np.asarray(stratum_ids)
+    pay = np.asarray(payload)
+    ua = np.asarray(u_accept)
+    us = np.asarray(u_slot)
+    mk = np.asarray(mask)
+    for j in range(sid.shape[0]):
+        if not mk[j]:
+            continue
+        s = int(sid[j])
+        c = counts[s] + 1
+        counts[s] = c
+        cap = int(capacity[s])
+        if c <= cap:
+            values[s, c - 1] = pay[j]
+        else:
+            if ua[j] * c < cap:
+                slot = min(int(us[j] * cap), cap - 1)
+                values[s, slot] = pay[j]
+    return values, counts

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: OASRS reservoir fold — the ingest-path hot loop.
+
+Folds a chunk of ``M`` records into ``S`` per-stratum reservoirs of width
+``N`` with *exact sequential* Vitter semantics (Algorithm 1 per stratum).
+
+TPU adaptation (DESIGN.md §2): the reservoirs and counters stay **resident
+in VMEM across grid steps** while item tiles stream in from HBM — the
+classic stationary-accumulator layout. The per-item dependency chain
+(counter → acceptance → slot) is inherently sequential, so the inner body is
+a ``fori_loop`` of scalar updates; its latency is hidden behind the DMA of
+the next item tile (the ingest path is HBM-bandwidth-bound: 8 bytes/item
+streamed vs ~10 scalar ops/item). Randomness (acceptance uniforms and
+replacement-slot uniforms) is precomputed outside with counter-based PRNG so
+the kernel itself is deterministic and replayable.
+
+The grid walks item tiles; reservoir/counter blocks use constant index maps
+(revisited blocks persist in VMEM — TPU grids are sequential on a core).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fold_kernel(sid_ref, pay_ref, u_ref, uslot_ref, mask_ref,
+                 counts_in_ref, cap_ref, values_in_ref,
+                 values_ref, counts_ref, *, block_m: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        values_ref[...] = values_in_ref[...]
+        counts_ref[...] = counts_in_ref[...]
+
+    def body(j, _):
+        s = sid_ref[0, j]
+        live = mask_ref[0, j]
+        c = counts_ref[0, s] + 1
+        cap = cap_ref[0, s]
+        filling = c <= cap
+        u = u_ref[0, j]
+        accept = live & (filling |
+                         (u * c.astype(jnp.float32) < cap.astype(jnp.float32)))
+        rslot = jnp.floor(
+            uslot_ref[0, j] * cap.astype(jnp.float32)).astype(jnp.int32)
+        rslot = jnp.clip(rslot, 0, jnp.maximum(cap - 1, 0))
+        slot = jnp.where(filling, c - 1, rslot)
+        old = values_ref[s, slot]
+        values_ref[s, slot] = jnp.where(accept, pay_ref[0, j], old)
+        counts_ref[0, s] = jnp.where(live, c, c - 1)
+        return ()
+
+    jax.lax.fori_loop(0, block_m, body, ())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "interpret"))
+def reservoir_fold(stratum_ids: jax.Array, payload: jax.Array,
+                   u_accept: jax.Array, u_slot: jax.Array,
+                   mask: jax.Array, counts: jax.Array, capacity: jax.Array,
+                   values: jax.Array, block_m: int = 512,
+                   interpret: bool = False):
+    """Fold a chunk into reservoirs (exact sequential semantics).
+
+    Args:
+      stratum_ids: ``[M]`` int32.
+      payload: ``[M]`` item payloads (float32 values or int32 indices).
+      u_accept / u_slot: ``[M]`` float32 uniforms in [0, 1).
+      mask: ``[M]`` bool.
+      counts: ``[S]`` int32 running ``C_i``.
+      capacity: ``[S]`` int32 ``N_i``.
+      values: ``[S, N_max]`` current reservoir payloads.
+
+    Returns:
+      ``(new_values [S, N_max], new_counts [S])``.
+    """
+    m = stratum_ids.shape[0]
+    s, n_max = values.shape
+    if m % block_m != 0:
+        pad = block_m - m % block_m
+        stratum_ids = jnp.pad(stratum_ids, (0, pad))
+        payload = jnp.pad(payload, (0, pad))
+        u_accept = jnp.pad(u_accept, (0, pad))
+        u_slot = jnp.pad(u_slot, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+        m = stratum_ids.shape[0]
+    grid = (m // block_m,)
+    item = lambda: pl.BlockSpec((1, block_m), lambda i: (0, i))
+    full_vec = pl.BlockSpec((1, s), lambda i: (0, 0))
+    full_res = pl.BlockSpec((s, n_max), lambda i: (0, 0))
+    kernel = functools.partial(_fold_kernel, block_m=block_m)
+    new_values, new_counts = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[item(), item(), item(), item(), item(),
+                  full_vec, full_vec, full_res],
+        out_specs=[full_res, full_vec],
+        out_shape=[jax.ShapeDtypeStruct((s, n_max), values.dtype),
+                   jax.ShapeDtypeStruct((1, s), jnp.int32)],
+        interpret=interpret,
+    )(stratum_ids[None, :], payload[None, :], u_accept[None, :],
+      u_slot[None, :], mask[None, :], counts[None, :], capacity[None, :],
+      values)
+    return new_values, new_counts[0]

@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: the program is
+lowered against ShapeDtypeStruct stand-ins (no allocation), SPMD-partitioned
+for the production mesh, and compiled. ``memory_analysis()`` proves the
+per-device footprint; ``cost_analysis()`` + the partitioned HLO's collective
+ops feed the §Roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi4-mini-3.8b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs as cfgs
+from repro.distributed import sharding as shd
+from repro.launch import mesh as mesh_lib
+from repro.launch.specs import build_program
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# Ring-schedule byte multipliers per op kind (documented in EXPERIMENTS.md):
+# all-reduce moves ~2× its payload (RS+AG phases); reduce-scatter moves its
+# INPUT once; the others move ~their result once.
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic from the partitioned HLO, by op kind."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+                      r"([a-z\-]+)\(", stripped)
+        if not m or m.group(1) not in _COLLECTIVES:
+            continue
+        kind = m.group(1)
+        shapes = _SHAPE_RE.findall(stripped)
+        if not shapes:
+            continue
+        # result shape(s) appear before the op name; operand shapes after.
+        head = stripped.split(kind + "(")[0]
+        tail = stripped.split(kind + "(", 1)[1]
+        res_shapes = _SHAPE_RE.findall(head)
+        opd_shapes = _SHAPE_RE.findall(tail.split("),")[0] + ")")
+        res_b = sum(_shape_bytes(d, s) for d, s in res_shapes)
+        opd_b = sum(_shape_bytes(d, s) for d, s in opd_shapes)
+        if kind == "all-reduce":
+            b = 2 * res_b
+        elif kind == "reduce-scatter":
+            b = opd_b
+        else:
+            b = res_b
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             cfg_override=None, verbose: bool = True) -> dict:
+    """Lower + compile one cell; return the dry-run record."""
+    ok, reason = cfgs.cell_applicable(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "status": "SKIP",
+                "reason": reason}
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cfg = cfg_override or cfgs.get_config(arch)
+    prog = build_program(arch, shape, mesh, cfg_override=cfg_override)
+    with shd.use_mesh(mesh, shd.build_rules(cfg, mesh)):
+        jitted = jax.jit(prog.fn, in_shardings=prog.in_shardings,
+                         out_shardings=prog.out_shardings)
+        lowered = jitted.lower(*prog.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch, "shape": shape, "mode": prog.mode,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "status": "OK",
+        "lower_sec": round(t_lower, 1),
+        "compile_sec": round(t_compile, 1),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        "collective_bytes_per_device": coll["total"],
+        "collectives": {k: coll[k] for k in _COLLECTIVES},
+        "collective_counts": coll["counts"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape} × {rec['mesh']}: OK "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: args={mem.argument_size_in_bytes:,} "
+              f"out={mem.output_size_in_bytes:,} "
+              f"temp={mem.temp_size_in_bytes:,} bytes/device")
+        print(f"  cost_analysis: flops/dev={rec['flops_per_device']:.3e} "
+              f"bytes/dev={rec['bytes_per_device']:.3e}")
+        print(f"  collectives/dev: {coll['total']:,} bytes "
+              f"{coll['counts']}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(cfgs.ARCHS))
+    ap.add_argument("--shape", choices=list(cfgs.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in cfgs.ARCHS:
+            for shape in cfgs.SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod)
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "status": "FAIL",
+                   "mesh": "pod2x16x16" if args.multi_pod else "16x16",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

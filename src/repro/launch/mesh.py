@@ -1,0 +1,27 @@
+"""Production mesh construction (spec'd in the assignment).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; ``dryrun.py`` sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names — lets the same
+    annotated programs run on the CPU container for smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e-like hardware constants used by the roofline analysis (§Roofline).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

@@ -1,0 +1,57 @@
+"""Serving driver: batched generation + approximate telemetry.
+
+Usage (CPU-scale demo):
+  PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
+      --smoke --requests 8 --steps 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfgs
+from repro.models import api
+from repro.models.param import init_params
+from repro.serve.serve_step import Server
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b",
+                    choices=list(cfgs.ARCHS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--tenants", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = cfgs.get_config(args.arch, smoke=args.smoke).replace(
+        dtype=jnp.float32)
+    params = init_params(api.skeleton(cfg), jax.random.PRNGKey(0))
+    server = Server(cfg, params, num_tenants=args.tenants)
+
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(
+        key, (args.requests, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (args.requests, args.prompt_len, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (args.requests, cfg.num_patches, cfg.d_model))
+    tenants = jax.random.randint(jax.random.fold_in(key, 3),
+                                 (args.requests,), 0, args.tenants)
+    out = server.generate(batch, steps=args.steps, tenant_ids=tenants)
+    est = server.telemetry_mean()
+    print(f"[serve] generated {out.shape} tokens; "
+          f"mean decode latency {float(est.value):.2f} "
+          f"± {float(est.error_bound(0.95)):.2f} ms (95% CI, sampled)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Abstract input specs + lowering entry points for every dry-run cell.
+
+``input_specs(arch, shape)`` returns weak-type-correct
+``jax.ShapeDtypeStruct`` stand-ins for every model input — nothing is
+allocated. ``build_program`` pairs them with the function each cell lowers:
+
+  train_4k     → ``train_step``  (OASRS-weighted loss + AdamW/ZeRO update)
+  prefill_32k  → ``prefill``     (prompt forward + cache build)
+  decode_32k   → ``serve_step``  (ONE new token against a seq_len cache)
+  long_500k    → ``serve_step``  (sub-quadratic archs only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs as cfgs
+from repro.distributed import sharding as shd
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.models.param import abstract_params, param_shardings
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class CellProgram:
+    """Everything needed to ``jit(...).lower(...)`` one dry-run cell."""
+    name: str
+    fn: Callable
+    args: tuple              # abstract ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any
+    mode: str                # train | prefill | decode
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, seq_len: int, batch: int) -> dict:
+    """Abstract training batch for one step."""
+    specs = {
+        "tokens": _sds((batch, seq_len), jnp.int32),
+        "weights": _sds((batch,), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = _sds((batch, seq_len, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        specs["tokens"] = _sds(
+            (batch, seq_len - cfg.num_patches), jnp.int32)
+        specs["patches"] = _sds(
+            (batch, cfg.num_patches, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """Public helper: the abstract inputs of the cell's lowered program."""
+    cfg = cfgs.get_config(arch)
+    seq_len, batch = cfgs.SHAPES[shape]
+    if shape == "train_4k":
+        return batch_specs(cfg, seq_len, batch)
+    if shape.startswith("prefill"):
+        return batch_specs(cfg, seq_len, batch)
+    # decode cells: one token + the abstract cache state
+    state = jax.eval_shape(
+        partial(api.init_decode_state, cfg, batch, seq_len))
+    return {"tokens": _sds((batch, 1), jnp.int32), "state": state}
+
+
+def _batch_shardings(specs: dict, mesh: Mesh) -> dict:
+    out = {}
+    for k, v in specs.items():
+        logical = ["batch"] + [None] * (v.ndim - 1)
+        out[k] = NamedSharding(
+            mesh, shd.resolve_spec(logical, v.shape, mesh))
+    return out
+
+
+def _state_leaf_sharding(leaf, batch: int, mesh: Mesh) -> NamedSharding:
+    """Serve-state sharding. 5-D leaves are KV caches
+    ``[L, B, S, Hkv, hd]`` → full logical resolution (batch over DP,
+    flash-decode seq/head sharding over model per the active rules). Other
+    leaves: first dim equal to ``batch`` goes data-parallel (first-match —
+    state layouts put batch before head dims); the rest replicate and are
+    refined by in-program ``with_sharding_constraint`` annotations."""
+    if leaf.ndim == 5:
+        return NamedSharding(mesh, shd.resolve_spec(
+            ("layers", "batch", "kv_seq", "kv_heads", None),
+            leaf.shape, mesh))
+    parts = [None] * leaf.ndim
+    for i, d in enumerate(leaf.shape):
+        if d == batch:
+            spec = shd.resolve_spec(("batch",), (d,), mesh)[0]
+            if spec is not None:
+                parts[i] = spec
+            break
+    return NamedSharding(mesh, P(*parts))
+
+
+def serve_state_shardings(state_abstract, batch: int, mesh: Mesh):
+    return jax.tree.map(
+        lambda l: _state_leaf_sharding(l, batch, mesh), state_abstract)
+
+
+def abstract_train_state(cfg: ModelConfig, skeleton) -> opt.TrainState:
+    params = abstract_params(skeleton)
+    f32 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
+    return opt.TrainState(
+        params=params, master=f32, mu=f32,
+        nu=jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params),
+        step=_sds((), jnp.int32))
+
+
+def build_program(arch: str, shape: str, mesh: Mesh,
+                  cfg_override: Optional[ModelConfig] = None,
+                  opt_cfg: Optional[opt.OptConfig] = None) -> CellProgram:
+    cfg = cfg_override or cfgs.get_config(arch)
+    seq_len, batch = cfgs.SHAPES[shape]
+    if opt_cfg is None:
+        zero_axes = (("pod", "data", "model")
+                     if getattr(cfg, "pure_dp", False)
+                     else ("pod", "data"))
+        opt_cfg = opt.OptConfig(zero_axes=zero_axes)
+    skeleton = api.skeleton(cfg)
+
+    with shd.use_mesh(mesh, shd.build_rules(cfg, mesh)):
+        p_shard = param_shardings(skeleton, mesh)
+
+        if shape == "train_4k":
+            specs = batch_specs(cfg, seq_len, batch)
+            st_abs = abstract_train_state(cfg, skeleton)
+            st_shard = opt.state_shardings(skeleton, mesh, opt_cfg)
+            step_fn = make_train_step(cfg, opt_cfg)
+            return CellProgram(
+                name=f"{arch}:{shape}", fn=step_fn,
+                args=(st_abs, specs),
+                in_shardings=(st_shard, _batch_shardings(specs, mesh)),
+                out_shardings=(st_shard, None),
+                mode="train")
+
+        if shape.startswith("prefill"):
+            specs = batch_specs(cfg, seq_len, batch)
+            pf = api.prefill_fn(cfg)
+            fn = lambda params, b: pf(params, b)
+            return CellProgram(
+                name=f"{arch}:{shape}", fn=fn,
+                args=(abstract_params(skeleton), specs),
+                in_shardings=(p_shard, _batch_shardings(specs, mesh)),
+                out_shardings=None,
+                mode="prefill")
+
+        # decode cells
+        state_abs = jax.eval_shape(
+            partial(api.init_decode_state, cfg, batch, seq_len))
+        tok = _sds((batch, 1), jnp.int32)
+        dec = api.decode_fn(cfg)
+        fn = lambda params, state, tokens: dec(params, state, tokens)
+        st_shard = serve_state_shardings(state_abs, batch, mesh)
+        tok_shard = NamedSharding(
+            mesh, shd.resolve_spec(("batch", None), tok.shape, mesh))
+        return CellProgram(
+            name=f"{arch}:{shape}", fn=fn,
+            args=(abstract_params(skeleton), state_abs, tok),
+            in_shardings=(p_shard, st_shard, tok_shard),
+            out_shardings=(None, st_shard),
+            mode="decode")

@@ -1,0 +1,130 @@
+"""Unified model API: one entry point per (family × phase).
+
+``batch`` layout (training):
+  tokens   [B, S]        — target/text tokens (all families)
+  weights  [B]           — OASRS stratum weights W_i per sequence
+  frames   [B, F, D]     — encdec only (audio frontend stub)
+  patches  [B, P, D]     — vlm only (vision frontend stub)
+
+Serving exposes ``prefill(params, batch) -> (logits, state)`` and
+``decode(params, state, tokens) -> (logits, state)``; the state type is
+family-specific (KV cache / recurrent states) but always a pytree.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ed
+from repro.models import rglru as rg
+from repro.models import transformer as tr
+from repro.models import vlm as vl
+from repro.models import xlstm as xl
+from repro.models.config import ModelConfig
+
+
+def skeleton(cfg: ModelConfig) -> dict:
+    if cfg.family in ("dense", "moe"):
+        return tr.lm_skeleton(cfg)
+    if cfg.family == "encdec":
+        return ed.encdec_skeleton(cfg)
+    if cfg.family == "vlm":
+        return vl.vlm_skeleton(cfg)
+    if cfg.family == "hybrid":
+        return rg.rg_skeleton(cfg)
+    if cfg.family == "ssm":
+        return xl.xlstm_skeleton(cfg)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ModelConfig) -> Callable:
+    """Returns ``f(params, batch) -> (loss, metrics)``."""
+    def f(params, batch):
+        w = batch.get("weights")
+        if cfg.family in ("dense", "moe"):
+            return tr.lm_loss(params, batch["tokens"], cfg, seq_weights=w)
+        if cfg.family == "encdec":
+            return ed.encdec_loss(params, batch["frames"], batch["tokens"],
+                                  cfg, seq_weights=w)
+        if cfg.family == "vlm":
+            return vl.vlm_loss(params, batch["tokens"], batch["patches"],
+                               cfg, seq_weights=w)
+        if cfg.family == "hybrid":
+            return rg.rg_loss(params, batch["tokens"], cfg, seq_weights=w)
+        if cfg.family == "ssm":
+            return xl.xlstm_loss(params, batch["tokens"], cfg,
+                                 seq_weights=w)
+        raise ValueError(cfg.family)
+    return f
+
+
+def prefill_fn(cfg: ModelConfig) -> Callable:
+    """Returns ``f(params, batch) -> (logits, serve_state)``."""
+    def f(params, batch, max_len: int = 0):
+        if cfg.family in ("dense", "moe"):
+            return tr.prefill(params, batch["tokens"], cfg, max_len=max_len)
+        if cfg.family == "encdec":
+            return ed.encdec_prefill(params, batch["frames"],
+                                     batch["tokens"], cfg, max_len=max_len)
+        if cfg.family == "vlm":
+            return vl.vlm_prefill(params, batch["tokens"],
+                                  batch["patches"], cfg, max_len=max_len)
+        if cfg.family == "hybrid":
+            return rg.rg_prefill(params, batch["tokens"], cfg)
+        if cfg.family == "ssm":
+            return xl.xlstm_prefill(params, batch["tokens"], cfg)
+        raise ValueError(cfg.family)
+    return f
+
+
+def decode_fn(cfg: ModelConfig) -> Callable:
+    """Returns ``f(params, state, tokens) -> (logits, state)``."""
+    def f(params, state, tokens):
+        if cfg.family in ("dense", "moe"):
+            return tr.decode_step(params, state, tokens, cfg)
+        if cfg.family == "encdec":
+            return ed.encdec_decode_step(params, state, tokens, cfg)
+        if cfg.family == "vlm":
+            return vl.vlm_decode_step(params, state, tokens, cfg)
+        if cfg.family == "hybrid":
+            return rg.rg_decode_step(params, state, tokens, cfg)
+        if cfg.family == "ssm":
+            return xl.xlstm_decode_step(params, state, tokens, cfg)
+        raise ValueError(cfg.family)
+    return f
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int):
+    """Family-specific zero decode state with a saturated-length cache —
+    the exact object the ``decode_*``/``long_*`` dry-run cells carry."""
+    from repro.models import kvcache as kvc
+    # Allocate cache_len + 16 slots: room for the new token while keeping
+    # the sequence axis divisible by TP=16 (flash-decode sharding).
+    alloc = cache_len + 16
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache = kvc.init_cache(cfg, cfg.num_layers, batch, alloc)
+        import dataclasses
+        return dataclasses.replace(
+            cache, position=jnp.asarray(cache_len, jnp.int32))
+    if cfg.family == "encdec":
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        l = cfg.num_layers
+        f = cfg.num_frames or cache_len
+        return {
+            "self_k": jnp.zeros((l, batch, alloc, hkv, hd), cfg.dtype),
+            "self_v": jnp.zeros((l, batch, alloc, hkv, hd), cfg.dtype),
+            "cross_k": jnp.zeros((l, batch, f, hkv, hd), cfg.dtype),
+            "cross_v": jnp.zeros((l, batch, f, hkv, hd), cfg.dtype),
+            "position": jnp.asarray(cache_len, jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        st = rg.rg_init_decode_state(cfg, batch)
+        st["position"] = jnp.asarray(cache_len, jnp.int32)
+        return st
+    if cfg.family == "ssm":
+        st = xl.xlstm_init_decode_state(cfg, batch)
+        st["position"] = jnp.asarray(cache_len, jnp.int32)
+        return st
+    raise ValueError(cfg.family)

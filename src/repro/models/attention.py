@@ -1,0 +1,234 @@
+"""Attention: GQA with RoPE, chunked-online-softmax training attention,
+local-window attention (Griffin-style), and KV-cache decode.
+
+TPU adaptation notes:
+
+* **Grouped-native GQA.** Q lives as ``[B, S, Hkv, G, hd]`` (G = Hq/Hkv)
+  and the Q projection is 4-D ``[d, Hkv, G, hd]`` — no head reshape ever
+  happens, so GSPMD never has to re-shard a split dimension, and KV tensors
+  are never repeated in memory.
+
+* **Three TP sharding modes** (picked per arch×mesh by
+  ``distributed.sharding.build_rules``): shard ``kv_heads`` when divisible
+  (seamless: 16 KV heads); else shard the GQA group dim ``q_group``
+  (llama3-405B: G=16, KV replicated); else shard ``head_dim``
+  (phi4: 24 heads, G=3 — hd=128 divides, scores contract the sharded dim
+  and GSPMD inserts the psum). Without this, any arch whose head counts
+  don't divide TP=16 gets its whole attention block REPLICATED 16× by
+  GSPMD (observed 4.8× total-FLOPs inflation on phi4 — EXPERIMENTS.md
+  §Perf).
+
+* **RoPE is interleaved** (adjacent-pair rotation): pairs are contiguous in
+  ``head_dim``, so head_dim-sharded rotation is shard-local.
+
+* Training/prefill attention never materializes the full ``S×S`` score
+  matrix: Python-unrolled query blocks (exact causal FLOPs) × lax.scan'd
+  KV blocks with running online softmax.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+
+NEG_INF = -1e30
+
+# Logical axes of the grouped attention tensors. In sequence-parallel mode
+# (build_rules fallback 3) ``attn_seq`` is the active model-axis mapping and
+# the head axes are inactive; in head modes it is the reverse.
+Q_LOGICAL = ("batch", "attn_seq", "kv_heads", "q_group", "head_dim_tp")
+KV_LOGICAL = ("batch", None, "kv_heads", "head_dim_tp")
+
+
+def attention_skeleton(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    hkv = cfg.num_kv_heads
+    g = cfg.num_heads // hkv
+    return {
+        "wq": ParamSpec((d, hkv, g, hd),
+                        ("embed_tp", "kv_heads", "q_group", "head_dim_tp"),
+                        dtype=cfg.dtype),
+        "wk": ParamSpec((d, hkv, hd),
+                        ("embed_tp", "kv_heads", "head_dim_tp"),
+                        dtype=cfg.dtype),
+        "wv": ParamSpec((d, hkv, hd),
+                        ("embed_tp", "kv_heads", "head_dim_tp"),
+                        dtype=cfg.dtype),
+        "wo": ParamSpec((hkv, g, hd, d),
+                        ("kv_heads", "q_group", "head_dim_tp", "embed_tp"),
+                        dtype=cfg.dtype),
+    }
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Interleaved RoPE: rotate adjacent pairs ``(x[2i], x[2i+1])``.
+
+    Pairs are contiguous, so a head_dim-sharded tensor rotates locally.
+    x: [..., hd]; positions broadcastable to x's sequence axis ([S] or []).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # [..., S, half]
+    # add broadcast dims for (heads..., pair):
+    extra = x.ndim - ang.ndim - 1
+    ang = ang.reshape(ang.shape[:-1] + (1,) * extra + (half,))
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xp = x.astype(jnp.float32).reshape(x.shape[:-1] + (half, 2))
+    x1, x2 = xp[..., 0], xp[..., 1]
+    rot = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rot.reshape(x.shape).astype(x.dtype)
+
+
+def qkv(params: dict, x: jax.Array, positions: jax.Array,
+        cfg: ModelConfig, use_rope: bool = True):
+    """x: [B, S, D] → q [B,S,Hkv,G,hd], k/v [B,S,Hkv,hd]."""
+    q = jnp.einsum("bsd,dhgk->bshgk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, *Q_LOGICAL)
+    k = shard(k, *KV_LOGICAL)
+    v = shard(v, *KV_LOGICAL)
+    return q, k, v
+
+
+def chunked_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, cfg: ModelConfig,
+    window: Optional[int] = None, causal: bool = True) -> jax.Array:
+    """Causal (optionally local-window) or full attention, online softmax.
+
+    q: [B, Sq, Hkv, G, hd]; k, v: [B, Skv, Hkv, hd].
+    Returns [B, Sq, Hkv, G, hd]. ``causal=False`` gives bidirectional
+    attention (encoder self-attn, cross-attention); Sq and Skv may differ.
+    """
+    from repro.distributed.sharding import get_rule
+    b, s_in, hkv, g, hd = q.shape
+    skv_in = k.shape[1]
+    if get_rule("attn_seq") is not None:
+        # Sequence-parallel attention: Q's seq axis is model-sharded, so a
+        # single query block (sliced python blocks would fragment the
+        # sharded dim); causality is handled purely by the mask. Costs ≤2×
+        # the exact-causal score FLOPs — scores are a few % of layer FLOPs
+        # for every arch in this mode.
+        qc = s_in
+    else:
+        qc = min(cfg.attn_q_chunk, s_in)
+    ck = min(cfg.attn_kv_chunk, skv_in)
+    # Pad to chunk multiples. Padded keys sit at the END, so causality
+    # guarantees no real query attends them (non-causal pads are masked
+    # explicitly); padded query rows are sliced off before returning.
+    s = ((s_in + qc - 1) // qc) * qc
+    skv = ((skv_in + ck - 1) // ck) * ck
+    if causal and s != skv:
+        s = skv = max(s, skv)
+    if s != s_in:
+        q = jnp.pad(q, [(0, 0), (0, s - s_in), (0, 0), (0, 0), (0, 0)])
+    if skv != skv_in:
+        pad = [(0, 0), (0, skv - skv_in), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    nq, nk = s // qc, skv // ck
+    scale = hd ** -0.5
+
+    kb = k.reshape(b, nk, ck, hkv, hd)
+    vb = v.reshape(b, nk, ck, hkv, hd)
+
+    out_blocks = []
+    for i in range(nq):
+        # Keep operands in bf16; dots accumulate in f32 via
+        # preferred_element_type — avoids materializing f32 copies of
+        # Q/K/V (conversion churn was the dominant HLO-bytes term,
+        # EXPERIMENTS.md §Perf iteration 3).
+        qi = q[:, i * qc:(i + 1) * qc] * jnp.asarray(scale, q.dtype)
+        q_pos = i * qc + jnp.arange(qc)
+        start = 0
+        if causal and window is not None:
+            # query p attends keys in (p - window, p]
+            start = max(0, (i * qc - window + 1) // ck)
+        # last KV block any query of this block may see (qc and ck may
+        # differ — e.g. the single-query-block sequence-parallel mode)
+        stop = min(nk, -(-((i + 1) * qc) // ck)) if causal else nk
+        steps = stop - start
+
+        def body(carry, jkv):
+            m, l, acc = carry
+            j, kj, vj = jkv
+            k_pos = j * ck + jnp.arange(ck)
+            s_ij = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj,
+                              preferred_element_type=jnp.float32)
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+                if window is not None:
+                    mask &= k_pos[None, :] > q_pos[:, None] - window
+            else:
+                mask = jnp.broadcast_to(
+                    (k_pos < skv_in)[None, :], (qc, ck))
+            # additive mask: one fused add instead of broadcast+select
+            s_ij = s_ij + jnp.where(mask, 0.0, NEG_INF)[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+            p = jnp.exp(s_ij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            # carry acc in [b,h,g,q,d] — same layout as the scores, so no
+            # per-step transpose/copy of score-sized tensors
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd",
+                            p.astype(qi.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qc, hd), jnp.float32)
+        js = jnp.arange(start, stop)
+        if cfg.attn_unroll:
+            carry = (m0, l0, a0)
+            for t in range(steps):
+                j = start + t
+                carry, _ = body(carry, (js[t], kb[:, j], vb[:, j]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0),
+                (js, kb[:, start:stop].transpose(1, 0, 2, 3, 4),
+                 vb[:, start:stop].transpose(1, 0, 2, 3, 4)),
+                length=steps)
+        blk = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+        out_blocks.append(blk.transpose(0, 3, 1, 2, 4))   # → [b,q,h,g,d]
+
+    out = jnp.concatenate(out_blocks, axis=1)
+    return shard(out[:, :s_in], *Q_LOGICAL)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
+    """One-token attention against a (ring) KV cache.
+
+    q: [B, 1, Hkv, G, hd]; caches: [B, Smax, Hkv, hd]; cache_len: [] int32.
+    Returns [B, 1, Hkv, G, hd].
+    """
+    b, _, hkv, g, hd = q.shape
+    smax = k_cache.shape[1]
+    qg = q[:, 0] * jnp.asarray(hd ** -0.5, q.dtype)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    valid = jnp.arange(smax) < cache_len
+    s = s + jnp.where(valid, 0.0, NEG_INF)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(q.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o[:, None].astype(q.dtype)
+
+
+def proj_out(params: dict, attn_out: jax.Array) -> jax.Array:
+    """attn_out: [B, S, Hkv, G, hd] → [B, S, D]."""
+    out = jnp.einsum("bshgk,hgkd->bsd", attn_out, params["wo"])
+    return shard(out, "batch", None, "embed")

@@ -1,0 +1,70 @@
+"""KV-cache pytrees for decode, sharded and scan-compatible.
+
+Caches carry a leading ``layers`` axis so the decode step scans over layers
+with the per-layer cache as scan input/output. ``position`` is a scalar —
+the serving benchmarks (paper-style saturation runs) use aligned batches;
+per-request lengths would only change the validity mask construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array          # [L, B, Smax, Hkv, hd]
+    v: jax.Array          # [L, B, Smax, Hkv, hd]
+    position: jax.Array   # [] int32 — tokens generated so far (global pos)
+    window: int = dataclasses.field(default=0)  # >0 → ring cache
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+
+# ``window`` is structural (affects trace shape), so it is pytree metadata.
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "position"], meta_fields=["window"])
+
+
+def init_cache(cfg: ModelConfig, num_layers: int, batch: int, max_len: int,
+               window: int = 0) -> KVCache:
+    shape = (num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    zeros = jnp.zeros(shape, cfg.dtype)
+    return KVCache(
+        k=shard(zeros, "layers", "batch", "kv_seq", "kv_heads", None),
+        v=shard(zeros, "layers", "batch", "kv_seq", "kv_heads", None),
+        position=jnp.zeros((), jnp.int32),
+        window=window)
+
+
+def cache_len(cache: KVCache) -> jax.Array:
+    """Number of valid entries (ring caches saturate at the window)."""
+    if cache.window:
+        return jnp.minimum(cache.position, cache.window)
+    return cache.position
+
+
+def write_token(layer_k: jax.Array, layer_v: jax.Array, cache: KVCache,
+                k_new: jax.Array, v_new: jax.Array):
+    """Insert one token's K/V into a single layer's cache slice.
+
+    layer_k/v: [B, Smax, Hkv, hd]; k_new/v_new: [B, 1, Hkv, hd].
+    Returns updated (layer_k, layer_v). Ring semantics when window > 0.
+    """
+    pos = cache.position
+    if cache.window:
+        slot = pos % cache.window
+    else:
+        slot = pos
+    layer_k = jax.lax.dynamic_update_slice_in_dim(
+        layer_k, k_new.astype(layer_k.dtype), slot, axis=1)
+    layer_v = jax.lax.dynamic_update_slice_in_dim(
+        layer_v, v_new.astype(layer_v.dtype), slot, axis=1)
+    return layer_k, layer_v

@@ -1,0 +1,100 @@
+"""Shared neural layers: norms, RoPE, MLPs, embeddings (functional style).
+
+Every function takes explicit params (pytrees of arrays) so the whole model
+is a pure function — required for pjit lowering against abstract params.
+Sharding is expressed with logical-axis annotations (distributed/sharding).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_skeleton(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs   (RoPE lives in models/attention.py — interleaved variant)
+# ---------------------------------------------------------------------------
+
+def mlp_skeleton(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.mlp_activation in ("swiglu", "geglu")
+    skel = {
+        "w_in": ParamSpec((d, f), ("embed_tp", "mlp"), dtype=cfg.dtype),
+        "w_out": ParamSpec((f, d), ("mlp", "embed_tp"), dtype=cfg.dtype),
+    }
+    if gated:
+        skel["w_gate"] = ParamSpec((d, f), ("embed_tp", "mlp"),
+                                   dtype=cfg.dtype)
+    return skel
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = x @ params["w_in"]
+    h = shard(h, "batch", None, "mlp")
+    if cfg.mlp_activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    elif cfg.mlp_activation == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * h
+    elif cfg.mlp_activation == "relu2":      # nemotron-4 squared ReLU
+        r = jax.nn.relu(h)
+        h = r * r
+    elif cfg.mlp_activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(cfg.mlp_activation)
+    out = h @ params["w_out"]
+    return shard(out, "batch", None, "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_skeleton(cfg: ModelConfig) -> dict:
+    return {
+        "tokens": ParamSpec((cfg.vocab_size, cfg.d_model),
+                            ("vocab", "embed_tp"), dtype=cfg.dtype,
+                            init="normal", scale=0.02),
+    }
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(params["tokens"], tokens, axis=0)
+    return shard(out, "batch", None, "embed")
+
+
+def unembed_skeleton(cfg: ModelConfig) -> dict:
+    return {
+        "w": ParamSpec((cfg.d_model, cfg.vocab_size),
+                       ("embed_tp", "vocab"), dtype=cfg.dtype),
+    }
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    # f32 accumulation directly out of the dot: the loss wants f32 logits,
+    # and a separate [B, S, vocab] convert is the single largest tensor in
+    # the program for the 200k+-vocab archs.
+    logits = jnp.einsum("bsd,dv->bsv", x, params["w"],
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "batch", None, "vocab")

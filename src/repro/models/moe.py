@@ -1,0 +1,176 @@
+"""Mixture-of-Experts FFN with sort-based (dropless-style) dispatch + EP.
+
+Dispatch is the *stratified sampling* problem in disguise — experts are
+strata, the router assigns each token to k strata, and the per-expert
+capacity ``C`` is a reservoir. Two overflow policies:
+
+* ``positional`` (default, GShard-compatible): tokens beyond capacity are
+  dropped in sequence order — biased against late positions.
+* ``reservoir`` (``cfg.reservoir_routing``, the paper's technique applied
+  beyond-paper): overflow is resolved by reservoir sampling inside each
+  expert's assignment list, so every token of an overloaded expert has equal
+  survival probability; surviving gates are re-inflated by ``n_i/C`` (the
+  OASRS weight), keeping the expected expert output unbiased. See
+  EXPERIMENTS.md §Beyond-paper.
+
+Expert weights are sharded over the ``model`` axis (EP); token buffers are
+annotated ``('experts', None, None)`` so GSPMD inserts the all-to-all at the
+dispatch/return boundaries.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+from repro.utils import rank_within_stratum
+
+
+def moe_skeleton(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.num_experts
+    skel = {
+        "router": ParamSpec((d, e), ("embed_tp", "experts"),
+                            dtype=jnp.float32),
+        "w_in": ParamSpec((e, d, f), ("experts", "embed_tp", "expert_mlp"),
+                          dtype=cfg.dtype),
+        "w_gate": ParamSpec((e, d, f), ("experts", "embed_tp", "expert_mlp"),
+                            dtype=cfg.dtype),
+        "w_out": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed_tp"),
+                           dtype=cfg.dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.expert_d_ff * cfg.num_shared_experts
+        skel["shared"] = {
+            "w_in": ParamSpec((d, fs), ("embed_tp", "mlp"), dtype=cfg.dtype),
+            "w_gate": ParamSpec((d, fs), ("embed_tp", "mlp"),
+                                dtype=cfg.dtype),
+            "w_out": ParamSpec((fs, d), ("mlp", "embed_tp"), dtype=cfg.dtype),
+        }
+    return skel
+
+
+def _dispatch_indices(eids: jax.Array, gates: jax.Array, capacity: int,
+                      num_experts: int, key: Optional[jax.Array]):
+    """Per-group dispatch plan. eids/gates: [A] flat assignments.
+
+    Returns (dst slot in [E*C), keep mask, gate scale).
+    """
+    if key is None:
+        rank_key = eids
+    else:
+        # Reservoir overflow policy: rank assignments inside each expert by
+        # a random permutation instead of arrival order → uniform survival.
+        u = jax.random.uniform(key, eids.shape)
+        order = jnp.argsort(eids.astype(jnp.float32) + u * 0.5)
+        inv = jnp.zeros_like(order).at[order].set(
+            jnp.arange(order.shape[0], dtype=order.dtype))
+        # rank within expert after random shuffle:
+        rank_shuffled = rank_within_stratum(eids[order])
+        rank = rank_shuffled[inv]
+        keep = rank < capacity
+        dst = jnp.where(keep, eids * capacity + rank, num_experts * capacity)
+        # HT re-inflation: surviving gates represent n_i/C originals.
+        n_per = jnp.zeros((num_experts,), jnp.float32).at[eids].add(1.0)
+        scale = jnp.maximum(n_per / capacity, 1.0)[eids]
+        return dst, keep, gates * scale
+    rank = rank_within_stratum(rank_key)
+    keep = rank < capacity
+    dst = jnp.where(keep, eids * capacity + rank, num_experts * capacity)
+    return dst, keep, gates
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig,
+            key: Optional[jax.Array] = None) -> jax.Array:
+    """MoE FFN. x: [B, S, D] (training/prefill) or [B, 1, D] (decode)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_token
+    # Group = batch row for training (keeps the dispatch sort local); the
+    # whole batch is one group for decode (S == 1).
+    if s > 1:
+        groups, tg = b, s
+    else:
+        groups, tg = 1, b
+    xg = x.reshape(groups, tg, d)
+    # NOTE (§Perf iteration 5, REFUTED): sharding dispatch groups over
+    # pod×data×model made GSPMD fall back to "involuntary full
+    # rematerialization" on the group→expert reshard (collective term 6×
+    # WORSE on kimi-k2). Groups therefore stay data-sharded; the model-rank
+    # replication of the dispatch is the accepted cost (see EXPERIMENTS.md).
+    capacity = max(int(tg * k * cfg.capacity_factor / e), 4)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, k)                 # [g, tg, k]
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    def plan(eid_flat, gate_flat, gkey):
+        return _dispatch_indices(
+            eid_flat, gate_flat, capacity, e,
+            gkey if cfg.reservoir_routing else None)
+
+    eflat = eids.reshape(groups, tg * k)
+    gflat = gates.reshape(groups, tg * k)
+    if cfg.reservoir_routing:
+        keys = jax.random.split(
+            key if key is not None else jax.random.PRNGKey(0), groups)
+        dst, keep, gsc = jax.vmap(plan)(eflat, gflat, keys)
+    else:
+        dst, keep, gsc = jax.vmap(lambda a, g: plan(a, g, None))(eflat, gflat)
+
+    tok = jnp.broadcast_to(
+        jnp.arange(tg, dtype=jnp.int32)[:, None], (tg, k)).reshape(-1)
+    tok = jnp.broadcast_to(tok[None], (groups, tg * k))
+
+    # Scatter tokens into per-expert buffers [g, E*C(+1 overflow row), D].
+    # The scatter/gather run SHARD-LOCAL (buffers data-sharded on g only);
+    # the expert axis resharding happens on the contiguous buffer via one
+    # with_sharding_constraint → a single all-to-all, instead of GSPMD
+    # all-gathering around scatters on a sharded dim (§Perf iteration 4).
+    buf = jnp.zeros((groups, e * capacity + 1, d), cfg.dtype)
+    buf = shard(buf, "batch", None, None)
+    xa = jnp.take_along_axis(
+        xg, tok[..., None], axis=1)                        # [g, tg*k, D]
+    buf = jax.vmap(lambda bu, ds, xv: bu.at[ds].set(xv))(buf, dst, xa)
+    xbuf = buf[:, :-1].reshape(groups, e, capacity, d)
+    xbuf = shard(xbuf, "batch", "experts", None, None)     # the all-to-all
+
+    # Per-expert gated FFN. EP over `experts` when divisible, else TP over
+    # the within-expert hidden dim (rules decide — build_rules).
+    h = jnp.einsum("gecd,edf->gecf", xbuf, params["w_in"])
+    h = shard(h, "batch", "experts", None, "expert_mlp")
+    g_ = jnp.einsum("gecd,edf->gecf", xbuf, params["w_gate"])
+    h = jax.nn.silu(g_) * h
+    ybuf = jnp.einsum("gecf,efd->gecd", h, params["w_out"])
+    ybuf = shard(ybuf, "batch", "experts", None, None)
+    ybuf = ybuf.reshape(groups, e * capacity, d)
+    ybuf = shard(ybuf, "batch", None, None)                # back to local
+
+    # Gather back + weighted combine (shard-local).
+    ya = jnp.take_along_axis(
+        ybuf, jnp.minimum(dst, e * capacity - 1)[..., None], axis=1)
+    contrib = ya * (gsc * keep.astype(jnp.float32))[..., None].astype(
+        ya.dtype)
+    y = jnp.zeros((groups, tg, d), contrib.dtype)
+    y = jax.vmap(lambda acc, t, c: acc.at[t].add(c))(y, tok, contrib)
+    y = y.reshape(b, s, d)
+
+    if cfg.num_shared_experts:
+        sh = params["shared"]
+        hs = jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_in"])
+        y = y + hs @ sh["w_out"]
+    return shard(y.astype(x.dtype), "batch", None, "embed")
+
+
+def load_balancing_loss(probs: jax.Array, eids: jax.Array,
+                        num_experts: int) -> jax.Array:
+    """Standard auxiliary loss: E · Σ_e f_e · p_e (Switch-style)."""
+    p_mean = jnp.mean(probs.reshape(-1, num_experts), axis=0)
+    onehot = jax.nn.one_hot(eids.reshape(-1), num_experts)
+    f = jnp.mean(onehot, axis=0)
+    return num_experts * jnp.sum(f * p_mean)

@@ -1,0 +1,95 @@
+"""Parameter skeletons: one definition → init, abstract (dry-run), shardings.
+
+A model's ``skeleton(cfg)`` returns a pytree of :class:`ParamSpec`. From it:
+
+* ``init_params``      — materialize real arrays (smoke tests, training);
+* ``abstract_params``  — ``ShapeDtypeStruct`` stand-ins (the multi-pod
+  dry-run lowers against these; nothing is allocated);
+* ``param_shardings``  — ``NamedSharding`` per leaf from the logical axes
+  (feeds ``jax.jit(in_shardings=...)``).
+
+This mirrors how production JAX frameworks keep the parallelism plan next to
+the parameter definition instead of in a separate config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple                    # logical axis name per dim
+    dtype: Any = jnp.float32
+    init: str = "fan_in"              # fan_in | normal | zeros | ones
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(
+                f"shape {self.shape} / logical {self.logical} rank mismatch")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(skeleton) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        skeleton, is_leaf=_is_spec)
+
+
+def param_shardings(skeleton, mesh=None) -> Any:
+    return jax.tree.map(
+        lambda s: shd.named_sharding(s.logical, s.shape, mesh),
+        skeleton, is_leaf=_is_spec)
+
+
+def param_specs(skeleton, mesh=None) -> Any:
+    """PartitionSpec tree (for shard_map / debugging)."""
+    return jax.tree.map(
+        lambda s: shd.resolve_spec(s.logical, s.shape, mesh),
+        skeleton, is_leaf=_is_spec)
+
+
+def _init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(
+            key, spec.shape)).astype(spec.dtype)
+    if spec.init == "fan_in":
+        fan_in = spec.shape[0] if len(spec.shape) == 1 else int(
+            np.prod(spec.shape[:-1]))
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(skeleton, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(skeleton, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(skeleton) -> int:
+    leaves = jax.tree_util.tree_leaves(skeleton, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def param_bytes(skeleton) -> int:
+    leaves = jax.tree_util.tree_leaves(skeleton, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+                   for s in leaves))

@@ -1,0 +1,279 @@
+"""RecurrentGemma / Griffin-style hybrid: RG-LRU blocks + local attention.
+
+Block pattern cycles ``(rec, rec, attn)`` (1 local-attention block per 2
+recurrent blocks). The RG-LRU linear recurrence trains with
+``lax.associative_scan`` (O(log S) depth — the TPU-native replacement for
+the paper's sequential CUDA scan) and decodes with an O(1) carried state,
+which is what makes the ``long_500k`` cell feasible for this arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import layers as nn
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+
+_RG_C = 8.0   # Griffin's fixed recurrence sharpness constant
+
+
+def block_kind(cfg: ModelConfig, i: int) -> str:
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+    return pattern[i % len(pattern)]
+
+
+# ---------------------------------------------------------------------------
+# Skeletons
+# ---------------------------------------------------------------------------
+
+def _rec_block_skeleton(cfg: ModelConfig) -> dict:
+    d, r = cfg.d_model, cfg.rnn_width or cfg.d_model
+    return {
+        "ln1": nn.rmsnorm_skeleton(d),
+        "w_gelu": ParamSpec((d, r), ("embed_tp", "rnn"), dtype=cfg.dtype),
+        "w_rec": ParamSpec((d, r), ("embed_tp", "rnn"), dtype=cfg.dtype),
+        "conv_w": ParamSpec((cfg.conv_width, r), (None, "rnn"),
+                            dtype=cfg.dtype, init="normal", scale=0.1),
+        "conv_b": ParamSpec((r,), ("rnn",), init="zeros", dtype=cfg.dtype),
+        "gate_a": ParamSpec((r, r), ("embed_tp", "rnn"), dtype=cfg.dtype),
+        "gate_a_b": ParamSpec((r,), ("rnn",), init="zeros", dtype=cfg.dtype),
+        "gate_x": ParamSpec((r, r), ("embed_tp", "rnn"), dtype=cfg.dtype),
+        "gate_x_b": ParamSpec((r,), ("rnn",), init="zeros", dtype=cfg.dtype),
+        # Λ init ≈ 0.65 → aᶜ ∈ [0.9, 0.999] band of the Griffin paper.
+        "lam": ParamSpec((r,), ("rnn",), init="ones", dtype=jnp.float32,
+                         scale=1.0),
+        "w_out": ParamSpec((r, d), ("rnn", "embed_tp"), dtype=cfg.dtype),
+        "ln2": nn.rmsnorm_skeleton(d),
+        "mlp": nn.mlp_skeleton(cfg),
+    }
+
+
+def _attn_block_skeleton(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": nn.rmsnorm_skeleton(cfg.d_model),
+        "attn": attn.attention_skeleton(cfg),
+        "ln2": nn.rmsnorm_skeleton(cfg.d_model),
+        "mlp": nn.mlp_skeleton(cfg),
+    }
+
+
+def rg_skeleton(cfg: ModelConfig) -> dict:
+    blocks = []
+    for i in range(cfg.num_layers):
+        kind = block_kind(cfg, i)
+        blocks.append(_rec_block_skeleton(cfg) if kind == "rec"
+                      else _attn_block_skeleton(cfg))
+    return {
+        "embed": nn.embedding_skeleton(cfg),
+        "blocks": blocks,
+        "final_ln": nn.rmsnorm_skeleton(cfg.d_model),
+        "unembed": nn.unembed_skeleton(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU cell
+# ---------------------------------------------------------------------------
+
+def _rg_gates(bp: dict, x: jax.Array):
+    """x: [..., R] → (log_a, b) of the linear recurrence h = a·h + b."""
+    r_gate = jax.nn.sigmoid(
+        (x @ bp["gate_a"] + bp["gate_a_b"]).astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(
+        (x @ bp["gate_x"] + bp["gate_x_b"]).astype(jnp.float32))
+    log_a = -_RG_C * jax.nn.softplus(bp["lam"]) * r_gate
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * i_gate * x.astype(jnp.float32)
+    return log_a, b
+
+
+def rglru_scan(bp: dict, x: jax.Array,
+               h0: Optional[jax.Array] = None) -> tuple:
+    """Training-mode RG-LRU over [B, S, R] via associative scan."""
+    log_a, b = _rg_gates(bp, x)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(bp: dict, x: jax.Array, h: jax.Array) -> tuple:
+    """Decode-mode single step. x: [B, R], h: [B, R] (f32)."""
+    log_a, b = _rg_gates(bp, x)
+    h_new = jnp.exp(log_a) * h + b
+    return h_new.astype(x.dtype), h_new
+
+
+def _causal_conv(bp: dict, x: jax.Array,
+                 tail: Optional[jax.Array] = None):
+    """Depthwise causal conv, width ``K``. x: [B, S, R].
+
+    ``tail``: [B, K-1, R] carried inputs (decode); returns (y, new_tail).
+    """
+    k = bp["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * bp["conv_w"][i]
+            for i in range(k)) + bp["conv_b"]
+    return y, xp[:, -(k - 1):]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _rec_block_fwd(bp: dict, x: jax.Array, cfg: ModelConfig,
+                   state: Optional[dict] = None, decode: bool = False):
+    y = nn.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    lhs = jax.nn.gelu((y @ bp["w_gelu"]).astype(jnp.float32)).astype(x.dtype)
+    rhs = y @ bp["w_rec"]
+    rhs = shard(rhs, "batch", None, "rnn")
+    if decode:
+        conv, new_tail = _causal_conv(bp, rhs, state["conv"])
+        out, new_h = rglru_step(bp, conv[:, 0], state["h"])
+        out = out[:, None]
+        new_state = {"h": new_h, "conv": new_tail}
+    else:
+        conv, tail = _causal_conv(bp, rhs)
+        out, h_last = rglru_scan(bp, conv)
+        new_state = {"h": h_last, "conv": tail}
+    merged = (lhs * out.astype(jnp.float32)).astype(x.dtype)
+    x = x + merged @ bp["w_out"]
+    h2 = nn.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    x = x + nn.mlp(bp["mlp"], h2, cfg)
+    return shard(x, "batch", None, "embed"), new_state
+
+
+def _attn_block_fwd(bp: dict, x: jax.Array, positions, cfg: ModelConfig,
+                    state: Optional[dict] = None, decode: bool = False,
+                    pos_scalar=None):
+    h = nn.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv(bp["attn"], h, positions, cfg)
+    if decode:
+        w = cfg.local_window
+        slot = pos_scalar % w
+        lk = jax.lax.dynamic_update_slice_in_dim(
+            state["k"], k.astype(state["k"].dtype), slot, axis=1)
+        lv = jax.lax.dynamic_update_slice_in_dim(
+            state["v"], v.astype(state["v"].dtype), slot, axis=1)
+        valid = jnp.minimum(pos_scalar + 1, w)
+        o = attn.decode_attention(q, lk, lv, valid)
+        new_state = {"k": lk, "v": lv}
+    else:
+        o = attn.chunked_causal_attention(q, k, v, cfg,
+                                          window=cfg.local_window)
+        w = cfg.local_window
+        s = k.shape[1]
+        pad = max(w - s, 0)
+        k_tail = jnp.pad(k[:, -w:], [(0, 0), (0, pad), (0, 0), (0, 0)])
+        v_tail = jnp.pad(v[:, -w:], [(0, 0), (0, pad), (0, 0), (0, 0)])
+        if s >= w:
+            # Ring layout: position p lives at slot p % w, so the decode
+            # write at (s+t) % w always evicts the oldest entry.
+            k_tail = jnp.roll(k_tail, s % w, axis=1)
+            v_tail = jnp.roll(v_tail, s % w, axis=1)
+        new_state = {"k": k_tail, "v": v_tail}
+    x = x + attn.proj_out(bp["attn"], o)
+    h2 = nn.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    x = x + nn.mlp(bp["mlp"], h2, cfg)
+    return shard(x, "batch", None, "embed"), new_state
+
+
+# ---------------------------------------------------------------------------
+# Model: loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+             states: Optional[list] = None, decode: bool = False,
+             pos_scalar=None):
+    x = nn.embed(params["embed"], tokens).astype(cfg.dtype)
+    if decode:
+        positions = pos_scalar[None].astype(jnp.int32)
+    else:
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        kind = block_kind(cfg, i)
+        st = states[i] if states is not None else None
+
+        def run(bp, x, st, kind=kind):
+            if kind == "rec":
+                return _rec_block_fwd(bp, x, cfg, st, decode)
+            return _attn_block_fwd(bp, x, positions, cfg, st, decode,
+                                   pos_scalar)
+
+        if cfg.remat == "full" and not decode:
+            run = jax.checkpoint(run, prevent_cse=False)
+        x, ns = run(bp, x, st)
+        new_states.append(ns)
+    h = nn.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    return h, new_states
+
+
+def rg_loss(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            seq_weights: Optional[jax.Array] = None):
+    # Full-length inputs + rolled targets (see transformer.lm_loss).
+    inputs = tokens
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(targets, jnp.float32).at[:, -1].set(0.0)
+    h, _ = _forward(params, inputs, cfg)
+    logits = nn.unembed(params["unembed"], h).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    per_tok = (lse - picked) * mask
+    per_seq = jnp.sum(per_tok, axis=1) / jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    w = (seq_weights if seq_weights is not None
+         else jnp.ones(per_seq.shape, jnp.float32)).astype(jnp.float32)
+    loss = jnp.sum(w * per_seq) / jnp.maximum(jnp.sum(w), 1e-9)
+    return loss, {"loss": loss}
+
+
+def rg_prefill(params: dict, tokens: jax.Array, cfg: ModelConfig):
+    h, states = _forward(params, tokens, cfg)
+    logits = nn.unembed(params["unembed"], h[:, -1:]).astype(jnp.float32)
+    return logits, {"blocks": states,
+                    "position": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+
+def rg_decode_step(params: dict, state: dict, tokens: jax.Array,
+                   cfg: ModelConfig):
+    pos = state["position"]
+    h, new_states = _forward(params, tokens, cfg, states=state["blocks"],
+                             decode=True, pos_scalar=pos)
+    logits = nn.unembed(params["unembed"], h).astype(jnp.float32)
+    return logits, {"blocks": new_states, "position": pos + 1}
+
+
+def rg_init_decode_state(cfg: ModelConfig, batch: int):
+    """Zero decode state (used by the long_500k dry-run: decoding with a
+    'cache of seq_len' for a recurrent arch = a saturated O(1) state)."""
+    r = cfg.rnn_width or cfg.d_model
+    states = []
+    for i in range(cfg.num_layers):
+        if block_kind(cfg, i) == "rec":
+            states.append({
+                "h": jnp.zeros((batch, r), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, r), cfg.dtype),
+            })
+        else:
+            states.append({
+                "k": jnp.zeros((batch, cfg.local_window, cfg.num_kv_heads,
+                                cfg.head_dim), cfg.dtype),
+                "v": jnp.zeros((batch, cfg.local_window, cfg.num_kv_heads,
+                                cfg.head_dim), cfg.dtype),
+            })
+    return {"blocks": states, "position": jnp.zeros((), jnp.int32)}

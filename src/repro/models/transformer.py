@@ -1,0 +1,322 @@
+"""Decoder-only transformer LM (dense + MoE): train, prefill, decode.
+
+Layers are *stacked* (leading ``layers`` axis on every per-layer param) and
+walked with ``jax.lax.scan`` — the HLO stays O(1) in depth, which is what
+makes the 126-layer llama3-405B and 61-layer kimi-k2 dry-runs compile in
+reasonable time, and gives XLA a clean boundary for remat + collective
+overlap. MoE models with leading dense layers carry two stacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import kvcache as kvc
+from repro.models import layers as nn
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Skeletons
+# ---------------------------------------------------------------------------
+
+def _layer_skeleton(cfg: ModelConfig, use_moe: bool) -> dict:
+    skel = {
+        "ln1": nn.rmsnorm_skeleton(cfg.d_model),
+        "attn": attn.attention_skeleton(cfg),
+        "ln2": nn.rmsnorm_skeleton(cfg.d_model),
+    }
+    if use_moe:
+        skel["moe"] = moe_lib.moe_skeleton(cfg)
+    else:
+        d_ff = cfg.d_ff or cfg.expert_d_ff * max(
+            cfg.num_experts_per_token + cfg.num_shared_experts, 1)
+        skel["mlp"] = nn.mlp_skeleton(cfg, d_ff)
+    return skel
+
+
+def _stack(skel: dict, n: int) -> dict:
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical,
+                            dtype=s.dtype, init=s.init, scale=s.scale),
+        skel, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def lm_skeleton(cfg: ModelConfig) -> dict:
+    n_dense = cfg.first_dense_layers if cfg.is_moe else cfg.num_layers
+    n_moe = cfg.num_layers - cfg.first_dense_layers if cfg.is_moe else 0
+    skel = {
+        "embed": nn.embedding_skeleton(cfg),
+        "final_ln": nn.rmsnorm_skeleton(cfg.d_model),
+        "unembed": nn.unembed_skeleton(cfg),
+    }
+    if n_dense:
+        skel["dense_layers"] = _stack(_layer_skeleton(cfg, False), n_dense)
+    if n_moe:
+        skel["moe_layers"] = _stack(_layer_skeleton(cfg, True), n_moe)
+    return skel
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(lp: dict, x: jax.Array, positions: jax.Array,
+               cfg: ModelConfig, use_moe: bool,
+               window: Optional[int] = None) -> jax.Array:
+    h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv(lp["attn"], h, positions, cfg)
+    o = attn.chunked_causal_attention(q, k, v, cfg, window=window)
+    x = x + attn.proj_out(lp["attn"], o)
+    h = nn.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        x = x + moe_lib.moe_ffn(lp["moe"], h, cfg)
+    else:
+        x = x + nn.mlp(lp["mlp"], h, cfg)
+    return shard(x, "batch", "seq_res", "embed")
+
+
+def _maybe_scan(body, carry, xs, cfg: ModelConfig):
+    """lax.scan over stacked layers, or Python-unrolled (cost probes /
+    ``scan_layers=False``)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _scan_stack(stack: dict, x: jax.Array, positions: jax.Array,
+                cfg: ModelConfig, use_moe: bool) -> jax.Array:
+    def body(carry, lp):
+        return _layer_fwd(lp, carry, positions, cfg, use_moe), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = _maybe_scan(body, x, stack, cfg)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def hidden_states(params: dict, tokens: jax.Array, cfg: ModelConfig,
+                  extra_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """Token (+ optional prepended modality) embeddings → final hidden."""
+    x = nn.embed(params["embed"], tokens).astype(cfg.dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cfg.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x = shard(x, "batch", "seq_res", "embed")
+    if "dense_layers" in params:
+        x = _scan_stack(params["dense_layers"], x, positions, cfg, False)
+    if "moe_layers" in params:
+        x = _scan_stack(params["moe_layers"], x, positions, cfg, True)
+    return nn.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+
+
+def _xent_from_hidden(params: dict, h: jax.Array, targets: jax.Array,
+                      mask: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Per-position cross entropy; optionally seq-chunked so the full
+    ``[B, S, vocab]`` logits tensor never materializes (§Perf lever for the
+    256k-vocab archs)."""
+    def chunk_nll(h_c, t_c):
+        logits = nn.unembed(params["unembed"], h_c).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, t_c[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        return lse - picked
+
+    s = h.shape[1]
+    ck = cfg.logit_chunk
+    if not ck or s <= ck or s % ck:
+        nll = chunk_nll(h, targets)
+    else:
+        hb = h.reshape(h.shape[0], s // ck, ck, h.shape[2]).swapaxes(0, 1)
+        tb = targets.reshape(targets.shape[0], s // ck, ck).swapaxes(0, 1)
+        nll = jax.lax.map(lambda ht: chunk_nll(*ht), (hb, tb))
+        nll = nll.swapaxes(0, 1).reshape(targets.shape)
+    return nll * mask
+
+
+def lm_loss(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            seq_weights: Optional[jax.Array] = None,
+            extra_embeds: Optional[jax.Array] = None):
+    """Weighted causal-LM loss.
+
+    ``seq_weights``: OASRS stratum weights ``W_i`` per sequence — the
+    Horvitz–Thompson estimator of the full-stream loss (DESIGN.md §3). The
+    returned scalar is ``Σ_b w_b ℓ̄_b / Σ_b w_b``.
+    """
+    b, s = tokens.shape
+    # Full-length inputs + rolled targets (last position masked): keeps the
+    # sequence axis divisible by TP so sequence-parallel attention shards
+    # (an S−1 slice silently breaks the 16-way divisibility and replicates
+    # the score matrices — EXPERIMENTS.md §Perf iteration 3).
+    inputs = tokens
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(targets, jnp.float32).at[:, -1].set(0.0)
+    h = hidden_states(params, inputs, cfg, extra_embeds=extra_embeds)
+    if extra_embeds is not None:
+        h = h[:, extra_embeds.shape[1]:]
+    nll = _xent_from_hidden(params, h, targets, mask, cfg)
+    per_seq = jnp.sum(nll, axis=1) / jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    if seq_weights is None:
+        seq_weights = jnp.ones((b,), jnp.float32)
+    w = seq_weights.astype(jnp.float32)
+    loss = jnp.sum(w * per_seq) / jnp.maximum(jnp.sum(w), 1e-9)
+    metrics = {"loss": loss,
+               "tokens": jnp.sum(mask) }
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _layer_prefill(lp: dict, x: jax.Array, positions: jax.Array,
+                   cfg: ModelConfig, use_moe: bool,
+                   window: Optional[int] = None):
+    """Forward one layer AND return its K/V for the cache."""
+    h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv(lp["attn"], h, positions, cfg)
+    o = attn.chunked_causal_attention(q, k, v, cfg, window=window)
+    x = x + attn.proj_out(lp["attn"], o)
+    h = nn.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        x = x + moe_lib.moe_ffn(lp["moe"], h, cfg)
+    else:
+        x = x + nn.mlp(lp["mlp"], h, cfg)
+    return shard(x, "batch", None, "embed"), k, v
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            extra_embeds: Optional[jax.Array] = None,
+            window: int = 0, max_len: int = 0):
+    """Run the full prompt, build the KV cache, return last-token logits.
+
+    ``max_len``: cache allocation (≥ prompt length + decode budget);
+    defaults to the prompt length (dry-run decode cells allocate exactly
+    ``seq_len`` and decode token ``seq_len+1`` — matching the assignment's
+    "one new token with a KV cache of seq_len").
+    """
+    x = nn.embed(params["embed"], tokens).astype(cfg.dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cfg.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x = shard(x, "batch", None, "embed")
+
+    ks, vs = [], []
+    for name, use_moe in (("dense_layers", False), ("moe_layers", True)):
+        if name not in params:
+            continue
+
+        def body(carry, lp, use_moe=use_moe):
+            y, k, v = _layer_prefill(lp, carry, positions, cfg, use_moe,
+                                     window=window or None)
+            if window:
+                k = k[:, -window:]
+                v = v[:, -window:]
+            return y, (k, v)
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, (k_stack, v_stack) = _maybe_scan(body, x, params[name], cfg)
+        ks.append(k_stack)
+        vs.append(v_stack)
+
+    h = nn.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = nn.unembed(params["unembed"], h[:, -1:]).astype(jnp.float32)
+    k_all = jnp.concatenate(ks, 0)
+    v_all = jnp.concatenate(vs, 0)
+    if max_len and not window:
+        extra = max_len - k_all.shape[2]
+        if extra > 0:
+            pad = [(0, 0), (0, 0), (0, extra), (0, 0), (0, 0)]
+            k_all, v_all = jnp.pad(k_all, pad), jnp.pad(v_all, pad)
+    cache = kvc.KVCache(
+        k=shard(k_all, "layers", "batch", "kv_seq", "kv_heads", None),
+        v=shard(v_all, "layers", "batch", "kv_seq", "kv_heads", None),
+        position=jnp.asarray(min(x.shape[1], window) if window
+                             else x.shape[1], jnp.int32),
+        window=window)
+    return logits, cache
+
+
+def _layer_decode(lp: dict, x: jax.Array, layer_k, layer_v,
+                  cache: kvc.KVCache, cfg: ModelConfig, use_moe: bool,
+                  window: int = 0):
+    pos = cache.position
+    h = nn.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv(lp["attn"], h, pos[None].astype(jnp.int32), cfg)
+    layer_k, layer_v = kvc.write_token(layer_k, layer_v, cache, k, v)
+    valid = kvc.cache_len(cache) + 1
+    o = attn.decode_attention(q, layer_k, layer_v, valid)
+    x = x + attn.proj_out(lp["attn"], o)
+    h = nn.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        x = x + moe_lib.moe_ffn(lp["moe"], h, cfg)
+    else:
+        x = x + nn.mlp(lp["mlp"], h, cfg)
+    return shard(x, "batch", None, "embed"), layer_k, layer_v
+
+
+def decode_step(params: dict, cache: kvc.KVCache, tokens: jax.Array,
+                cfg: ModelConfig):
+    """One decode step for the whole batch: tokens ``[B, 1]`` → logits.
+
+    Scans over layers with the per-layer cache as scan I/O; the cache is
+    updated in place (functionally) at ``cache.position``.
+    """
+    x = nn.embed(params["embed"], tokens).astype(cfg.dtype)
+    n_dense = params["dense_layers"]["ln1"]["scale"].shape[0] \
+        if "dense_layers" in params else 0
+
+    new_k, new_v = [], []
+    offset = 0
+    for name, use_moe in (("dense_layers", False), ("moe_layers", True)):
+        if name not in params:
+            continue
+        n = params[name]["ln1"]["scale"].shape[0]
+        k_sl = jax.lax.dynamic_slice_in_dim(cache.k, offset, n, axis=0)
+        v_sl = jax.lax.dynamic_slice_in_dim(cache.v, offset, n, axis=0)
+
+        def body(carry, xs, use_moe=use_moe):
+            lp, lk, lv = xs
+            y, lk, lv = _layer_decode(lp, carry, lk, lv, cache, cfg,
+                                      use_moe, window=cache.window)
+            return y, (lk, lv)
+
+        x, (k_out, v_out) = _maybe_scan(body, x, (params[name], k_sl, v_sl),
+                                        cfg)
+        new_k.append(k_out)
+        new_v.append(v_out)
+        offset += n
+
+    h = nn.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = nn.unembed(params["unembed"], h).astype(jnp.float32)
+    cache = dataclasses.replace(
+        cache,
+        k=shard(jnp.concatenate(new_k, 0), "layers", "batch", "kv_seq",
+                "kv_heads", None),
+        v=shard(jnp.concatenate(new_v, 0), "layers", "batch", "kv_seq",
+                "kv_heads", None),
+        position=cache.position + 1)
+    return logits, cache

@@ -1,0 +1,39 @@
+"""VLM (InternVL2-76B backbone): vision patches + decoder-only LM.
+
+The InternViT frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings ``[B, P, d_model]`` which are
+prepended to the token embeddings; the loss covers text positions only.
+Everything else (GQA attention, sharding, serving) is the shared
+transformer stack.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+
+
+def vlm_skeleton(cfg: ModelConfig) -> dict:
+    return tr.lm_skeleton(cfg)
+
+
+def vlm_loss(params: dict, tokens: jax.Array, patches: jax.Array,
+             cfg: ModelConfig, seq_weights: Optional[jax.Array] = None):
+    """tokens: [B, S_text]; patches: [B, P, d_model] (frontend stub)."""
+    return tr.lm_loss(params, tokens, cfg, seq_weights=seq_weights,
+                      extra_embeds=patches)
+
+
+def vlm_prefill(params: dict, tokens: jax.Array, patches: jax.Array,
+                cfg: ModelConfig, max_len: int = 0):
+    return tr.prefill(params, tokens, cfg, extra_embeds=patches,
+                      max_len=max_len)
+
+
+def vlm_decode_step(params: dict, cache, tokens: jax.Array,
+                    cfg: ModelConfig):
+    return tr.decode_step(params, cache, tokens, cfg)

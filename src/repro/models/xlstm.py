@@ -1,0 +1,323 @@
+"""xLSTM: alternating mLSTM (matrix-memory) and sLSTM (scalar-memory) blocks.
+
+Faithful to the xLSTM paper's cells with exponential gating and the
+max-stabilizer ``m_t``. Both cells are linear-state recurrences → O(1)
+decode state per layer, which is why this arch runs the ``long_500k`` cell.
+
+Training walks time with ``lax.scan`` (the sLSTM has *no* parallel form —
+xLSTM paper §2.2 — and the mLSTM shares the same scan here; a chunkwise-
+parallel mLSTM is a §Perf candidate, see EXPERIMENTS.md). ``d_ff=0`` in the
+assignment: blocks carry their own up/down projections, there is no
+separate FFN.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as nn
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+
+
+def block_kind(cfg: ModelConfig, i: int) -> str:
+    pattern = cfg.block_pattern or ("mlstm", "slstm")
+    return pattern[i % len(pattern)]
+
+
+# ---------------------------------------------------------------------------
+# Skeletons
+# ---------------------------------------------------------------------------
+
+def _mlstm_skeleton(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    di = 2 * d                       # pre-up-projection factor 2 (paper)
+    return {
+        "ln": nn.rmsnorm_skeleton(d),
+        "w_up": ParamSpec((d, di), ("embed_tp", "rnn"), dtype=cfg.dtype),
+        "w_z": ParamSpec((d, di), ("embed_tp", "rnn"), dtype=cfg.dtype),
+        "conv_w": ParamSpec((cfg.conv_width, di), (None, "rnn"),
+                            dtype=cfg.dtype, init="normal", scale=0.1),
+        "conv_b": ParamSpec((di,), ("rnn",), init="zeros", dtype=cfg.dtype),
+        "wq": ParamSpec((di, di), ("rnn", None), dtype=cfg.dtype),
+        "wk": ParamSpec((di, di), ("rnn", None), dtype=cfg.dtype),
+        "wv": ParamSpec((di, di), ("rnn", None), dtype=cfg.dtype),
+        "w_if": ParamSpec((di, 2 * h), ("rnn", None), dtype=jnp.float32),
+        "b_if": ParamSpec((2 * h,), (None,), init="zeros",
+                          dtype=jnp.float32),
+        "gn": ParamSpec((di,), ("rnn",), init="ones", dtype=jnp.float32),
+        "w_down": ParamSpec((di, d), ("rnn", "embed_tp"), dtype=cfg.dtype),
+    }
+
+
+def _slstm_skeleton(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    return {
+        "ln": nn.rmsnorm_skeleton(d),
+        "conv_w": ParamSpec((cfg.conv_width, d), (None, "rnn"),
+                            dtype=cfg.dtype, init="normal", scale=0.1),
+        "conv_b": ParamSpec((d,), ("rnn",), init="zeros", dtype=cfg.dtype),
+        "w_i": ParamSpec((d, d), ("embed_tp", "rnn"), dtype=cfg.dtype),
+        "w_f": ParamSpec((d, d), ("embed_tp", "rnn"), dtype=cfg.dtype),
+        "w_z": ParamSpec((d, d), ("embed_tp", "rnn"), dtype=cfg.dtype),
+        "w_o": ParamSpec((d, d), ("embed_tp", "rnn"), dtype=cfg.dtype),
+        "b_i": ParamSpec((d,), ("rnn",), init="zeros", dtype=jnp.float32),
+        "b_f": ParamSpec((d,), ("rnn",), init="ones", dtype=jnp.float32),
+        "b_z": ParamSpec((d,), ("rnn",), init="zeros", dtype=jnp.float32),
+        "b_o": ParamSpec((d,), ("rnn",), init="zeros", dtype=jnp.float32),
+        "gn": ParamSpec((d,), ("rnn",), init="ones", dtype=jnp.float32),
+        "w_down": ParamSpec((d, d), ("rnn", "embed_tp"), dtype=cfg.dtype),
+    }
+
+
+def xlstm_skeleton(cfg: ModelConfig) -> dict:
+    blocks = [(_mlstm_skeleton(cfg) if block_kind(cfg, i) == "mlstm"
+               else _slstm_skeleton(cfg)) for i in range(cfg.num_layers)]
+    return {
+        "embed": nn.embedding_skeleton(cfg),
+        "blocks": blocks,
+        "final_ln": nn.rmsnorm_skeleton(cfg.d_model),
+        "unembed": nn.unembed_skeleton(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cells (single step) — shared by scan-training and decode.
+# ---------------------------------------------------------------------------
+
+def _mlstm_cell(q, k, v, i_til, f_til, state):
+    """One mLSTM step. q/k/v: [B, H, hd]; i/f: [B, H]; state: (C, n, m)."""
+    c_prev, n_prev, m_prev = state
+    hd = q.shape[-1]
+    k = k / jnp.sqrt(jnp.float32(hd))
+    m_new = jnp.maximum(f_til + m_prev, i_til)
+    i_p = jnp.exp(i_til - m_new)
+    f_p = jnp.exp(f_til + m_prev - m_new)
+    c_new = f_p[..., None, None] * c_prev + \
+        i_p[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n_new = f_p[..., None] * n_prev + i_p[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, q)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    h_out = num / den[..., None]
+    return h_out, (c_new, n_new, m_new)
+
+
+def _slstm_cell(i_til, f_til, z, o, state):
+    """One sLSTM step. gates: [B, D(=H·hd)]; state: (c, n, m)."""
+    c_prev, n_prev, m_prev = state
+    m_new = jnp.maximum(f_til + m_prev, i_til)
+    i_p = jnp.exp(i_til - m_new)
+    f_p = jnp.exp(f_til + m_prev - m_new)
+    c_new = f_p * c_prev + i_p * jnp.tanh(z)
+    n_new = f_p * n_prev + i_p
+    h_out = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1.0)
+    return h_out, (c_new, n_new, m_new)
+
+
+def _groupnorm(x: jax.Array, scale: jax.Array, heads: int,
+               eps: float = 1e-5) -> jax.Array:
+    """Per-head group norm over the feature axis. x: [..., D]."""
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (heads, shp[-1] // heads)).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * scale).astype(x.dtype)
+
+
+def _time_scan(step, carry, xs, unroll: bool):
+    """lax.scan over time, or Python-unrolled for cost probes."""
+    if not unroll:
+        return jax.lax.scan(step, carry, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for t in range(length):
+        xt = jax.tree.map(lambda a: a[t], xs)
+        carry, y = step(carry, xt)
+        ys.append(y)
+    return carry, jnp.stack(ys, axis=0)
+
+
+def _causal_conv(w, b, x, tail=None):
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    return y, xp[:, -(k - 1):]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _mlstm_block(bp: dict, x: jax.Array, cfg: ModelConfig,
+                 state: Optional[dict], decode: bool):
+    b, s, d = x.shape
+    h_heads = cfg.num_heads
+    y = nn.rmsnorm(bp["ln"], x, cfg.norm_eps)
+    up = y @ bp["w_up"]                                  # [B,S,di]
+    z = y @ bp["w_z"]
+    up = shard(up, "batch", None, "rnn")
+    conv, new_tail = _causal_conv(
+        bp["conv_w"], bp["conv_b"], up,
+        state["conv"] if state is not None else None)
+    cpath = jax.nn.silu(conv)
+    di = up.shape[-1]
+    hd = di // h_heads
+
+    def heads(t):
+        return t.reshape(b, s, h_heads, hd).swapaxes(1, 2)  # [B,H,S,hd]
+
+    q = heads(cpath @ bp["wq"]).astype(jnp.float32)
+    k = heads(cpath @ bp["wk"]).astype(jnp.float32)
+    v = heads(up @ bp["wv"]).astype(jnp.float32)
+    gates = (cpath @ bp["w_if"] + bp["b_if"]).astype(jnp.float32)
+    i_til = gates[..., :h_heads].swapaxes(1, 2)          # [B,H,S]
+    f_til = jax.nn.log_sigmoid(
+        gates[..., h_heads:]).swapaxes(1, 2)
+
+    if state is None:
+        c0 = jnp.zeros((b, h_heads, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h_heads, hd), jnp.float32)
+        m0 = jnp.zeros((b, h_heads), jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def step(carry, t):
+        qt, kt, vt, it, ft = t
+        h_out, new = _mlstm_cell(qt, kt, vt, it, ft, carry)
+        return new, h_out
+
+    xs = (q.swapaxes(0, 2).swapaxes(1, 2),   # [S,B,H,hd]
+          k.swapaxes(0, 2).swapaxes(1, 2),
+          v.swapaxes(0, 2).swapaxes(1, 2),
+          i_til.transpose(2, 0, 1),          # [S,B,H]
+          f_til.transpose(2, 0, 1))
+    (c_n, n_n, m_n), h_seq = _time_scan(step, (c0, n0, m0), xs,
+                                        cfg.time_unroll)
+    h_seq = h_seq.transpose(1, 0, 2, 3).reshape(b, s, di)  # [B,S,di]
+    out = _groupnorm(h_seq.astype(cfg.dtype), bp["gn"], h_heads)
+    out = out * jax.nn.silu(z)
+    x = x + out @ bp["w_down"]
+    return shard(x, "batch", None, "embed"), {
+        "conv": new_tail, "c": c_n, "n": n_n, "m": m_n}
+
+
+def _slstm_block(bp: dict, x: jax.Array, cfg: ModelConfig,
+                 state: Optional[dict], decode: bool):
+    b, s, d = x.shape
+    y = nn.rmsnorm(bp["ln"], x, cfg.norm_eps)
+    conv, new_tail = _causal_conv(
+        bp["conv_w"], bp["conv_b"], y,
+        state["conv"] if state is not None else None)
+    cpath = jax.nn.silu(conv)
+    i_til = (cpath @ bp["w_i"] + bp["b_i"]).astype(jnp.float32)
+    f_til = jax.nn.log_sigmoid(
+        (cpath @ bp["w_f"] + bp["b_f"]).astype(jnp.float32))
+    z = (y @ bp["w_z"] + bp["b_z"]).astype(jnp.float32)
+    o = (y @ bp["w_o"] + bp["b_o"]).astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.zeros((b, d), jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def step(carry, t):
+        it, ft, zt, ot = t
+        h_out, new = _slstm_cell(it, ft, zt, ot, carry)
+        return new, h_out
+
+    xs = tuple(t.swapaxes(0, 1) for t in (i_til, f_til, z, o))  # [S,B,D]
+    (c_n, n_n, m_n), h_seq = _time_scan(step, (c0, n0, m0), xs,
+                                        cfg.time_unroll)
+    h_seq = h_seq.swapaxes(0, 1)                          # [B,S,D]
+    out = _groupnorm(h_seq.astype(cfg.dtype), bp["gn"], cfg.num_heads)
+    x = x + out @ bp["w_down"]
+    return shard(x, "batch", None, "embed"), {
+        "conv": new_tail, "c": c_n, "n": n_n, "m": m_n}
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+             states: Optional[list] = None):
+    x = nn.embed(params["embed"], tokens).astype(cfg.dtype)
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        kind = block_kind(cfg, i)
+        st = states[i] if states is not None else None
+        fn = _mlstm_block if kind == "mlstm" else _slstm_block
+
+        def run(bp, x, st, fn=fn):
+            return fn(bp, x, cfg, st, decode=states is not None)
+
+        if cfg.remat == "full" and states is None:
+            run = jax.checkpoint(run, prevent_cse=False)
+        x, ns = run(bp, x, st)
+        new_states.append(ns)
+    return nn.rmsnorm(params["final_ln"], x, cfg.norm_eps), new_states
+
+
+def xlstm_loss(params: dict, tokens: jax.Array, cfg: ModelConfig,
+               seq_weights: Optional[jax.Array] = None):
+    # Full-length inputs + rolled targets (see transformer.lm_loss).
+    inputs = tokens
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(targets, jnp.float32).at[:, -1].set(0.0)
+    h, _ = _forward(params, inputs, cfg)
+    logits = nn.unembed(params["unembed"], h).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    per_seq = jnp.sum((lse - picked) * mask, axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1), 1.0)
+    w = (seq_weights if seq_weights is not None
+         else jnp.ones(per_seq.shape, jnp.float32)).astype(jnp.float32)
+    loss = jnp.sum(w * per_seq) / jnp.maximum(jnp.sum(w), 1e-9)
+    return loss, {"loss": loss}
+
+
+def xlstm_prefill(params: dict, tokens: jax.Array, cfg: ModelConfig):
+    h, states = _forward(params, tokens, cfg)
+    logits = nn.unembed(params["unembed"], h[:, -1:]).astype(jnp.float32)
+    return logits, {"blocks": states,
+                    "position": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+
+def xlstm_decode_step(params: dict, state: dict, tokens: jax.Array,
+                      cfg: ModelConfig):
+    h, new_states = _forward(params, tokens, cfg, states=state["blocks"])
+    logits = nn.unembed(params["unembed"], h).astype(jnp.float32)
+    return logits, {"blocks": new_states, "position": state["position"] + 1}
+
+
+def xlstm_init_decode_state(cfg: ModelConfig, batch: int):
+    d, h = cfg.d_model, cfg.num_heads
+    states = []
+    for i in range(cfg.num_layers):
+        if block_kind(cfg, i) == "mlstm":
+            di = 2 * d
+            hd = di // h
+            states.append({
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, di),
+                                  cfg.dtype),
+                "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+                "n": jnp.zeros((batch, h, hd), jnp.float32),
+                "m": jnp.zeros((batch, h), jnp.float32),
+            })
+        else:
+            states.append({
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, d), cfg.dtype),
+                "c": jnp.zeros((batch, d), jnp.float32),
+                "n": jnp.zeros((batch, d), jnp.float32),
+                "m": jnp.zeros((batch, d), jnp.float32),
+            })
+    return {"blocks": states, "position": jnp.zeros((), jnp.int32)}

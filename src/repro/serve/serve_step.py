@@ -1,0 +1,68 @@
+"""Batched serving with StreamApprox telemetry.
+
+``Server`` wraps prefill/decode for an arch and maintains an OASRS state
+over per-request telemetry records (stratum = tenant id, value = e.g.
+decode latency or output length). Telemetry queries return windowed
+approximate aggregates with error bounds WITHOUT scanning every request —
+the paper's analytics applied to the serving plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adaptive, error, oasrs, query
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, num_tenants: int = 8,
+                 telemetry_capacity: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill_fn(cfg)(p, b, max_len=0))
+        self._decode = jax.jit(api.decode_fn(cfg))
+        self.telemetry = oasrs.init(
+            num_tenants, telemetry_capacity,
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.random.PRNGKey(seed))
+        self._fold = jax.jit(oasrs.update_chunk)
+
+    def prefill(self, batch: dict):
+        return self._prefill(self.params, batch)
+
+    def decode(self, state, tokens: jax.Array, tenant_ids=None):
+        t0 = time.perf_counter()
+        logits, state = self._decode(self.params, state, tokens)
+        jax.block_until_ready(logits)
+        dt = (time.perf_counter() - t0) * 1e3
+        if tenant_ids is not None:
+            lat = jnp.full((tokens.shape[0],), dt, jnp.float32)
+            self.telemetry = self._fold(self.telemetry, tenant_ids, lat)
+        return logits, state
+
+    def generate(self, batch: dict, steps: int, tenant_ids=None):
+        logits, state = self.prefill(batch)
+        toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out = [toks]
+        for _ in range(steps):
+            logits, state = self.decode(state, toks, tenant_ids)
+            toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            out.append(toks)
+        return jnp.concatenate(out, axis=1)
+
+    def telemetry_mean(self) -> error.Estimate:
+        """Approximate mean decode latency per window, with error bound."""
+        return query.query_mean(self.telemetry)
+
+    def telemetry_per_tenant(self) -> error.Estimate:
+        return query.group_means(self.telemetry)
+
+    def new_window(self):
+        self.telemetry = oasrs.reset_window(self.telemetry)

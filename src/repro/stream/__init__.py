@@ -1,0 +1,12 @@
+"""Stream substrate: sources, aggregator (Kafka analog), replay, pipeline."""
+from repro.stream import aggregator, pipeline, replay, sources
+from repro.stream.aggregator import StreamAggregator
+from repro.stream.sources import (GaussianSource, NetflowSource,
+                                  PoissonSource, StreamChunk, TaxiSource,
+                                  skewed)
+
+__all__ = [
+    "aggregator", "pipeline", "replay", "sources", "StreamAggregator",
+    "GaussianSource", "NetflowSource", "PoissonSource", "StreamChunk",
+    "TaxiSource", "skewed",
+]

@@ -1,0 +1,107 @@
+"""Host-side input pipeline: prefetch, double-buffering, batch assembly.
+
+The training integration of StreamApprox (DESIGN.md §3): the pipeline turns
+an aggregator's record stream into *training windows* — a window carries
+candidate sequences stratified by domain id — and hands them to the jitted
+train step, which applies OASRS on-device and trains on the weighted sample.
+
+``Prefetcher`` overlaps host generation of window ``e+1`` with device compute
+of window ``e`` (the Spark-Streaming "sample before the batch is formed"
+property: sampling happens on the ingest path, not after batch formation).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.stream.aggregator import StreamAggregator
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenWindowSpec:
+    """Shape of one training window of candidate sequences."""
+    window_sequences: int     # candidate sequences arriving per window
+    seq_len: int
+    num_domains: int          # strata
+    vocab_size: int
+
+
+def synthetic_token_window(spec: TokenWindowSpec, epoch: int,
+                           seed: int = 0):
+    """Deterministic synthetic LM window: (tokens, domain_ids).
+
+    Domains follow a long-tail mixture (Zipf-like) so the stratification
+    matters, mirroring real pretraining mixtures.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), epoch)
+    k1, k2 = jax.random.split(key)
+    ranks = jnp.arange(1, spec.num_domains + 1, dtype=jnp.float32)
+    probs = (1.0 / ranks) / jnp.sum(1.0 / ranks)
+    domains = jax.random.choice(k1, spec.num_domains,
+                                (spec.window_sequences,), p=probs)
+    # Zipf-ish unigram token distribution: learnable marginals, so smoke
+    # training actually reduces loss below ln(vocab).
+    tr = jnp.arange(1, spec.vocab_size + 1, dtype=jnp.float32)
+    tprobs = (1.0 / tr ** 1.1)
+    tprobs = tprobs / jnp.sum(tprobs)
+    tokens = jax.random.choice(
+        k2, spec.vocab_size, (spec.window_sequences, spec.seq_len),
+        p=tprobs).astype(jnp.int32)
+    return tokens, domains.astype(jnp.int32)
+
+
+class Prefetcher:
+    """Background-thread prefetch of host-side window construction.
+
+    ``fetch(e)`` must be a pure function of the epoch. Depth-1 double
+    buffering is enough to hide host generation behind device compute; the
+    thread is restartable, and a deterministic epoch cursor makes the
+    pipeline checkpointable (the cursor is part of training state).
+    """
+
+    def __init__(self, fetch: Callable[[int], object], start_epoch: int = 0,
+                 depth: int = 2):
+        self._fetch = fetch
+        self._epoch = start_epoch
+        self._depth = depth
+        self._buf: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._fill()
+
+    def _fill(self):
+        while len(self._buf) < self._depth:
+            e = self._epoch
+            self._epoch += 1
+            self._buf.append((e, self._fetch(e)))
+
+    def next(self):
+        with self._lock:
+            if not self._buf:        # consumer outpaced the fill thread
+                self._fill()
+            epoch, item = self._buf.popleft()
+            t = threading.Thread(target=self._fill_one)
+            t.daemon = True
+            t.start()
+            return epoch, item
+
+    def _fill_one(self):
+        with self._lock:
+            self._fill()
+
+    @property
+    def cursor(self) -> int:
+        """Next epoch to be generated — checkpoint this for exact resume."""
+        return self._epoch - len(self._buf)
+
+
+def stream_windows(aggregator: StreamAggregator, items_per_window: int,
+                   num_windows: int,
+                   start_epoch: int = 0) -> Iterator:
+    """Simple sequential window iterator over an aggregator."""
+    for e in range(start_epoch, start_epoch + num_windows):
+        yield e, aggregator.interval_chunk(e, items_per_window)

@@ -1,0 +1,70 @@
+"""Replay tool — paper §6.1 "Methodology".
+
+Feeds a stream program at increasing arrival rates until it saturates, and
+reports the peak sustainable throughput (items/sec). On this CPU container
+the numbers calibrate the *relative* speedups the paper reports (OASRS vs
+SRS vs STS vs native); the absolute TPU numbers come from the roofline model
+(EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    items_per_sec: float
+    seconds_per_window: float
+    windows: int
+
+
+def measure_window_program(
+    run_window: Callable[[int], object],
+    items_per_window: int,
+    warmup: int = 2,
+    windows: int = 10,
+) -> ReplayResult:
+    """Time a jitted per-window program end to end.
+
+    ``run_window(epoch)`` must consume exactly ``items_per_window`` records
+    and return a pytree of device arrays (blocked on before the clock stops).
+    """
+    for e in range(warmup):
+        jax.block_until_ready(run_window(e))
+    t0 = time.perf_counter()
+    for e in range(warmup, warmup + windows):
+        jax.block_until_ready(run_window(e))
+    dt = time.perf_counter() - t0
+    return ReplayResult(
+        items_per_sec=items_per_window * windows / dt,
+        seconds_per_window=dt / windows,
+        windows=windows,
+    )
+
+
+def saturation_search(
+    make_runner: Callable[[int], Callable[[int], object]],
+    start_items: int = 2_000,
+    growth: float = 2.0,
+    max_items: int = 4_000_000,
+    latency_slo_sec: float = 1.0,
+) -> ReplayResult:
+    """Paper's methodology: grow the offered rate until the per-window
+    latency exceeds the SLO; report the last sustainable rate."""
+    best = None
+    items = start_items
+    while items <= max_items:
+        runner = make_runner(items)
+        res = measure_window_program(runner, items, warmup=1, windows=3)
+        if res.seconds_per_window > latency_slo_sec:
+            break
+        best = res
+        items = int(items * growth)
+    if best is None:
+        best = measure_window_program(make_runner(start_items), start_items,
+                                      warmup=1, windows=3)
+    return best

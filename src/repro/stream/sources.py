@@ -1,0 +1,133 @@
+"""Synthetic stream sources — paper §5.1 and case-study-shaped generators.
+
+Each source produces ``(values, stratum_ids)`` chunks deterministically from
+a PRNG key, mirroring the paper's evaluation inputs:
+
+* ``GaussianSource`` / ``PoissonSource`` — the §5.1 microbenchmark streams
+  (three sub-streams A/B/C with the paper's exact parameters).
+* ``NetflowSource`` — CAIDA-like records (§6.2): strata = {TCP, UDP, ICMP},
+  value = flow bytes (heavy-tailed log-normal per protocol).
+* ``TaxiSource`` — DEBS'15-like rides (§6.3): strata = 6 NYC boroughs,
+  value = trip distance (borough-dependent gamma).
+
+Sources are pure: ``chunk(key, size)`` returns the same data for the same
+key, which is what makes window replay after failure recovery exact
+(DESIGN.md §2 fault-tolerance note).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import dataclass_pytree
+
+
+@dataclass_pytree
+@dataclasses.dataclass(frozen=True)
+class StreamChunk:
+    values: jax.Array        # [M] f32
+    stratum_ids: jax.Array   # [M] i32
+
+
+class Source:
+    """Interface: stratified record generator."""
+    num_strata: int
+
+    def chunk(self, key: jax.Array, size: int) -> StreamChunk:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianSource(Source):
+    """Paper §5.1: A(µ=10,σ=5), B(µ=1000,σ=50), C(µ=10000,σ=500)."""
+    mus: tuple = (10.0, 1000.0, 10000.0)
+    sigmas: tuple = (5.0, 50.0, 500.0)
+    mix: tuple = (1 / 3, 1 / 3, 1 / 3)   # arrival-rate mixture
+
+    @property
+    def num_strata(self) -> int:
+        return len(self.mus)
+
+    def chunk(self, key: jax.Array, size: int) -> StreamChunk:
+        k1, k2 = jax.random.split(key)
+        sid = jax.random.choice(
+            k1, self.num_strata, (size,),
+            p=jnp.asarray(self.mix, jnp.float32))
+        mu = jnp.asarray(self.mus, jnp.float32)[sid]
+        sg = jnp.asarray(self.sigmas, jnp.float32)[sid]
+        vals = mu + sg * jax.random.normal(k2, (size,))
+        return StreamChunk(values=vals, stratum_ids=sid.astype(jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonSource(Source):
+    """Paper §5.1: λ = (10, 1000, 1e8); §5.7 skew: mix (80, 19.99, 0.01)%."""
+    lams: tuple = (10.0, 1000.0, 1e8)
+    mix: tuple = (1 / 3, 1 / 3, 1 / 3)
+
+    @property
+    def num_strata(self) -> int:
+        return len(self.lams)
+
+    def chunk(self, key: jax.Array, size: int) -> StreamChunk:
+        k1, k2 = jax.random.split(key)
+        sid = jax.random.choice(
+            k1, self.num_strata, (size,),
+            p=jnp.asarray(self.mix, jnp.float32))
+        lam = jnp.asarray(self.lams, jnp.float32)[sid]
+        # Gaussian approximation for large λ keeps this vectorized & exactly
+        # reproducible; λ ≥ 10 throughout the paper's settings.
+        vals = lam + jnp.sqrt(lam) * jax.random.normal(k2, (size,))
+        return StreamChunk(values=jnp.maximum(vals, 0.0),
+                           stratum_ids=sid.astype(jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class NetflowSource(Source):
+    """CAIDA-like NetFlow: strata = protocol, value = flow bytes."""
+    #              TCP    UDP    ICMP
+    mix: tuple = (0.85, 0.13, 0.02)
+    log_mu: tuple = (7.5, 6.0, 4.5)      # log-bytes location per protocol
+    log_sigma: tuple = (1.8, 1.2, 0.6)
+
+    @property
+    def num_strata(self) -> int:
+        return 3
+
+    def chunk(self, key: jax.Array, size: int) -> StreamChunk:
+        k1, k2 = jax.random.split(key)
+        sid = jax.random.choice(k1, 3, (size,),
+                                p=jnp.asarray(self.mix, jnp.float32))
+        mu = jnp.asarray(self.log_mu, jnp.float32)[sid]
+        sg = jnp.asarray(self.log_sigma, jnp.float32)[sid]
+        vals = jnp.exp(mu + sg * jax.random.normal(k2, (size,)))
+        return StreamChunk(values=vals, stratum_ids=sid.astype(jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class TaxiSource(Source):
+    """DEBS'15-like taxi rides: strata = 6 boroughs, value = distance (mi)."""
+    mix: tuple = (0.55, 0.20, 0.12, 0.08, 0.04, 0.01)
+    shape: tuple = (2.0, 2.5, 2.2, 3.0, 2.8, 2.0)
+    scale: tuple = (1.2, 1.8, 2.5, 3.5, 5.0, 8.0)
+
+    @property
+    def num_strata(self) -> int:
+        return 6
+
+    def chunk(self, key: jax.Array, size: int) -> StreamChunk:
+        k1, k2 = jax.random.split(key)
+        sid = jax.random.choice(k1, 6, (size,),
+                                p=jnp.asarray(self.mix, jnp.float32))
+        shp = jnp.asarray(self.shape, jnp.float32)[sid]
+        scl = jnp.asarray(self.scale, jnp.float32)[sid]
+        vals = scl * jax.random.gamma(k2, shp)
+        return StreamChunk(values=vals, stratum_ids=sid.astype(jnp.int32))
+
+
+def skewed(source: Source, mix: Sequence[float]) -> Source:
+    """Re-mix a source's arrival rates (§5.4 varying rates, §5.7 skew)."""
+    return dataclasses.replace(source, mix=tuple(mix))

@@ -1,0 +1,140 @@
+"""Checkpointing: sharded save/restore, async writes, elastic re-mesh.
+
+Fault-tolerance contract (DESIGN.md §2): ALL run state — model params,
+optimizer moments, OASRS reservoir/counter state, the data-pipeline epoch
+cursor and PRNG keys — lives in one pytree and is checkpointed atomically.
+Restore accepts a *different* mesh (elastic scaling: shrink/grow between
+windows): arrays are saved unsharded per-leaf and re-placed with the target
+mesh's NamedShardings on load.
+
+Layout: ``<dir>/step_<N>/`` with one ``.npy`` per leaf + ``manifest.json``
+(treedef, shapes, dtypes, step). A ``COMMIT`` marker makes saves atomic —
+half-written checkpoints are ignored by ``latest_step``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_paths(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(directory: str, step: int, tree: Any,
+         keep_last: int = 3) -> str:
+    """Synchronous atomic checkpoint save."""
+    ckpt_dir = os.path.join(directory, f"step_{step:08d}")
+    tmp_dir = ckpt_dir + ".tmp"
+    if os.path.exists(tmp_dir):
+        shutil.rmtree(tmp_dir)
+    os.makedirs(tmp_dir, exist_ok=True)
+    leaves, treedef = _leaf_paths(tree)
+    manifest = {"step": step, "num_leaves": len(leaves),
+                "treedef": str(treedef), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        # ml_dtypes (bfloat16, fp8) don't survive a plain np.save/np.load
+        # roundtrip — store a byte view + the logical dtype in the manifest.
+        manifest["leaves"].append(
+            {"dtype": str(arr.dtype), "shape": list(arr.shape)})
+        np.save(os.path.join(tmp_dir, f"leaf_{i:05d}.npy"),
+                np.ascontiguousarray(arr).reshape(-1).view(np.uint8))
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp_dir, "COMMIT"), "w") as f:
+        f.write("ok")
+    if os.path.exists(ckpt_dir):
+        shutil.rmtree(ckpt_dir)
+    os.rename(tmp_dir, ckpt_dir)
+    _gc(directory, keep_last)
+    return ckpt_dir
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint serialization with training.
+
+    ``save`` snapshots device arrays to host (blocking only on transfer),
+    then writes in a background thread. ``wait`` joins the in-flight write
+    (call before exit / before starting a save at the same step dir).
+    """
+
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._thread = threading.Thread(
+            target=save, args=(self.directory, step, host_tree,
+                               self.keep_last))
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "COMMIT")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, target: Any,
+            shardings: Any = None) -> Any:
+    """Restore into ``target``'s structure, re-placing per ``shardings``.
+
+    ``shardings`` may come from a different mesh than the one the
+    checkpoint was written under — this is the elastic re-mesh path.
+    """
+    ckpt_dir = os.path.join(directory, f"step_{step:08d}")
+    leaves, treedef = _leaf_paths(target)
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: x is None)
+    else:
+        shard_leaves = [None] * len(leaves)
+    out = []
+    for i, (leaf, shd_) in enumerate(zip(leaves, shard_leaves)):
+        raw = np.load(os.path.join(ckpt_dir, f"leaf_{i:05d}.npy"))
+        meta = manifest["leaves"][i]
+        arr = raw.view(jnp.dtype(meta["dtype"])).reshape(meta["shape"])
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != target "
+                f"{leaf.shape}")
+        if shd_ is not None:
+            out.append(jax.device_put(arr, shd_))
+        else:
+            out.append(jax.device_put(jnp.asarray(arr)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _gc(directory: str, keep_last: int):
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(directory)
+        if n.startswith("step_") and not n.endswith(".tmp")
+        and os.path.exists(os.path.join(directory, n, "COMMIT")))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)

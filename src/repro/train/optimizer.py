@@ -1,0 +1,165 @@
+"""AdamW with ZeRO-sharded optimizer state + fp32 master weights.
+
+ZeRO via GSPMD: every fp32 state tensor (master copy, first/second moments)
+gets its parameter's PartitionSpec *plus* the data-parallel axes folded into
+the first divisible unsharded dim. XLA then materializes the classic ZeRO
+schedule on its own: gradients reduce-scatter into the shard, the update
+runs shard-local, and the bf16 params all-gather on use. At (2,16,16) this
+cuts optimizer memory 32× with zero manual collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models.param import ParamSpec
+from repro.utils import dataclass_pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    use_master: bool = True          # fp32 master copy (bf16 params)
+    zero_axes: tuple = ("pod", "data")
+
+
+@dataclass_pytree
+@dataclasses.dataclass
+class TrainState:
+    params: Any        # compute dtype, model-sharded
+    master: Any        # fp32, ZeRO-sharded (or None-pytree if disabled)
+    mu: Any            # fp32 first moment, ZeRO-sharded
+    nu: Any            # fp32 second moment, ZeRO-sharded
+    step: jax.Array
+
+
+def zero_pspec(pspec: P, shape: tuple, mesh: Optional[Mesh],
+               zero_axes: tuple) -> P:
+    """Fold the DP axes into the first divisible unsharded dim of ``pspec``."""
+    if mesh is None:
+        return pspec
+    free = [a for a in zero_axes if a in mesh.shape]
+    if not free:
+        return pspec
+    dp = int(np.prod([mesh.shape[a] for a in free]))
+    parts = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (cur, dim) in enumerate(zip(parts, shape)):
+        if cur is None and dim % dp == 0:
+            parts[i] = tuple(free) if len(free) > 1 else free[0]
+            return P(*parts)
+    return pspec  # nothing divisible — stay param-sharded
+
+
+def state_shardings(skeleton, mesh: Optional[Mesh],
+                    opt_cfg: OptConfig) -> TrainState:
+    """Tree of NamedShardings shaped like TrainState (for jit in/out)."""
+    is_spec = lambda x: isinstance(x, ParamSpec)
+
+    def pshard(s: ParamSpec):
+        if mesh is None:
+            return None
+        return NamedSharding(mesh, shd.resolve_spec(s.logical, s.shape, mesh))
+
+    def zshard(s: ParamSpec):
+        if mesh is None:
+            return None
+        base = shd.resolve_spec(s.logical, s.shape, mesh)
+        return NamedSharding(
+            mesh, zero_pspec(base, s.shape, mesh, opt_cfg.zero_axes))
+
+    params = jax.tree.map(pshard, skeleton, is_leaf=is_spec)
+    zero = jax.tree.map(zshard, skeleton, is_leaf=is_spec)
+    scalar = NamedSharding(mesh, P()) if mesh is not None else None
+    return TrainState(params=params, master=zero,
+                      mu=zero, nu=zero, step=scalar)
+
+
+def init_state(params, mesh: Optional[Mesh], opt_cfg: OptConfig,
+               skeleton=None) -> TrainState:
+    def zconstrain(x, skel_leaf=None):
+        x32 = x.astype(jnp.float32)
+        if mesh is None:
+            return x32
+        base = shd.resolve_spec(
+            skel_leaf.logical, skel_leaf.shape, mesh) if skel_leaf \
+            else P(*([None] * x.ndim))
+        spec = zero_pspec(base, x.shape, mesh, opt_cfg.zero_axes)
+        return jax.lax.with_sharding_constraint(
+            x32, NamedSharding(mesh, spec))
+
+    if skeleton is not None:
+        is_spec = lambda t: isinstance(t, ParamSpec)
+        master = jax.tree.map(lambda x, s: zconstrain(x, s), params,
+                              skeleton, is_leaf=None)
+    else:
+        master = jax.tree.map(zconstrain, params)
+    zeros = jax.tree.map(jnp.zeros_like, master)
+    return TrainState(
+        params=params,
+        master=master if opt_cfg.use_master else jax.tree.map(
+            lambda x: jnp.zeros((), jnp.float32), params),
+        mu=zeros,
+        nu=jax.tree.map(jnp.zeros_like, master),
+        step=jnp.zeros((), jnp.int32))
+
+
+def lr_at(opt_cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) /
+                       max(opt_cfg.warmup_steps, 1), 1.0)
+    return opt_cfg.lr * warm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def apply_updates(state: TrainState, grads, opt_cfg: OptConfig
+                  ) -> tuple[TrainState, dict]:
+    """One AdamW step. Grads in compute dtype; update math in fp32."""
+    grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_at(opt_cfg, step)
+    b1, b2 = opt_cfg.b1, opt_cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master, p):
+        g32 = g.astype(jnp.float32)
+        mu_n = b1 * mu + (1 - b1) * g32
+        nu_n = b2 * nu + (1 - b2) * g32 * g32
+        base = master if opt_cfg.use_master else p.astype(jnp.float32)
+        delta = (mu_n / c1) / (jnp.sqrt(nu_n / c2) + opt_cfg.eps)
+        new_master = base - lr * (delta + opt_cfg.weight_decay * base)
+        return mu_n, nu_n, new_master, new_master.astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, state.master,
+                       state.params)
+    mu = jax.tree.map(lambda t: t[0], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    params = jax.tree.map(lambda t: t[3], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_state = TrainState(
+        params=params,
+        master=master if opt_cfg.use_master else state.master,
+        mu=mu, nu=nu, step=step)
+    return new_state, {"grad_norm": gnorm, "lr": lr}

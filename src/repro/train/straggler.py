@@ -1,0 +1,69 @@
+"""Straggler mitigation via approximation (beyond-paper; DESIGN.md §3.4).
+
+StreamApprox's estimator structure gives a principled straggler policy for
+free: per-shard reservoirs are independent and weights come from *local*
+counters, so a shard that misses the window deadline is simply excluded
+from the query/gradient merge and the survivors are Horvitz–Thompson
+re-inflated by ``w_total / w_alive``. The estimate stays unbiased (shard
+loads are exchangeable under round-robin aggregation); only the variance —
+which the error module reports — grows.
+
+``WindowDeadline`` is the host-side policy object; the jnp helpers apply
+the reweighting inside jitted programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class WindowDeadline:
+    """Tracks per-shard arrival times against a window deadline."""
+    num_shards: int
+    deadline_sec: float
+    grace: float = 0.0
+
+    def __post_init__(self):
+        self._start = time.monotonic()
+        self._arrived = [False] * self.num_shards
+
+    def start_window(self):
+        self._start = time.monotonic()
+        self._arrived = [False] * self.num_shards
+
+    def mark_arrival(self, shard: int):
+        self._arrived[shard] = True
+
+    def expired(self) -> bool:
+        return time.monotonic() - self._start > (
+            self.deadline_sec + self.grace)
+
+    def alive_mask(self) -> jnp.ndarray:
+        """0/1 per shard; call when the deadline fires."""
+        return jnp.asarray(self._arrived, jnp.float32)
+
+
+def reweight_for_stragglers(seq_weights: jax.Array,
+                            shard_alive: jax.Array,
+                            shard_of_seq: jax.Array) -> jax.Array:
+    """Zero dead shards' sequences and HT-inflate the survivors.
+
+    seq_weights: [B] OASRS weights; shard_of_seq: [B] producing shard id;
+    shard_alive: [W] 0/1.
+    """
+    alive = shard_alive[shard_of_seq]
+    n_total = shard_alive.shape[0]
+    n_alive = jnp.maximum(jnp.sum(shard_alive), 1.0)
+    return seq_weights * alive * (n_total / n_alive)
+
+
+def drop_fraction_variance_penalty(drop_frac: jax.Array) -> jax.Array:
+    """Multiplier on Var(estimate) from dropping a fraction of shards
+    (1/(1-f) for exchangeable shards) — logged so operators can see the
+    accuracy cost of each straggler event."""
+    return 1.0 / jnp.maximum(1.0 - drop_frac, 1e-3)

@@ -1,0 +1,103 @@
+"""Training step: OASRS-weighted loss, microbatching, jit/pjit assembly.
+
+The StreamApprox integration (DESIGN.md §3): the data plane hands the step
+exactly ``global_batch`` sequences *sampled by OASRS from the arriving
+window*, plus their stratum weights ``W_i``. The loss is the
+Horvitz–Thompson ratio estimator, so its gradient is an unbiased estimator
+of the full-stream gradient at a fraction of the FLOPs — the paper's
+throughput⇄accuracy dial applied to training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+
+def shard_batch(batch: dict) -> dict:
+    def ann(k, x):
+        if x.ndim >= 1:
+            return shard(x, *(["batch"] + [None] * (x.ndim - 1)))
+        return x
+    return {k: ann(k, v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt.OptConfig,
+                    num_microbatches: int = 1) -> Callable:
+    """Build ``train_step(state, batch) -> (state, metrics)``.
+
+    ``num_microbatches > 1`` splits the batch and accumulates gradients in
+    fp32 with a ``lax.scan`` (sequential microbatches — the standard
+    memory/throughput trade; also the remat boundary XLA overlaps weight
+    all-gathers across).
+    """
+    loss_fn = api.loss_fn(cfg)
+
+    def loss_weighted(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return loss, metrics
+
+    def single_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_weighted, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: opt.TrainState, batch: dict):
+        batch = shard_batch(batch)
+        if num_microbatches == 1:
+            loss, metrics, grads = single_grads(state.params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                mb = b // num_microbatches
+                return x.reshape((num_microbatches, mb) + x.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def body(acc, mb):
+                loss_a, grads_a, denom_a = acc
+                # Per-microbatch HT estimator pieces: keep numerator and
+                # weight-denominator separate so the accumulated loss is
+                # the same ratio estimator as the unsplit batch.
+                w = mb.get("weights")
+                wsum = jnp.sum(w) if w is not None else jnp.float32(
+                    mb["tokens"].shape[0])
+                loss, _, grads = single_grads(state.params, mb)
+                grads = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) * wsum,
+                    grads_a, grads)
+                return (loss_a + loss * wsum, grads, denom_a + wsum), None
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss_num, grads, denom), _ = jax.lax.scan(
+                body, (jnp.float32(0), zero_grads, jnp.float32(0)), micro)
+            loss = loss_num / jnp.maximum(denom, 1e-9)
+            grads = jax.tree.map(
+                lambda g: (g / jnp.maximum(denom, 1e-9)), grads)
+            metrics = {"loss": loss}
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads,
+                             state.params)
+        new_state, opt_metrics = opt.apply_updates(state, grads, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    loss_fn = api.loss_fn(cfg)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, shard_batch(batch))
+        return metrics
+    return eval_step

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests run on the single CPU device (the 512-device override is ONLY for
+# the dry-run, per the assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,84 @@
+"""SRS / STS baseline tests (§4.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as bl
+from repro.core import error as err
+
+
+def _stream(key, m=4096, skew=(0.8, 0.19, 0.01)):
+    k1, k2 = jax.random.split(key)
+    sid = jax.random.choice(k1, 3, (m,), p=jnp.array(skew)).astype(jnp.int32)
+    mu = jnp.array([10.0, 1000.0, 10000.0])[sid]
+    x = mu + jax.random.normal(k2, (m,)) * mu * 0.05
+    return sid, x
+
+
+def test_srs_selects_exactly_k(key):
+    s = bl.srs_sample(key, 1000, 100)
+    assert int(jnp.sum(s.mask)) == 100
+    np.testing.assert_allclose(
+        float(jnp.sum(jnp.where(s.mask, s.weights, 0.0))), 1000.0, rtol=1e-4)
+
+
+def test_srs_unbiased_over_seeds(key):
+    sid, x = _stream(key)
+    ests = []
+    for t in range(40):
+        s = bl.srs_sample(jax.random.PRNGKey(1000 + t), 4096, 1024)
+        ests.append(float(jnp.sum(jnp.where(s.mask, x, 0.0)) * 4.0))
+    rel = abs(np.mean(ests) - float(jnp.sum(x))) / float(jnp.sum(x))
+    assert rel < 0.05, f"relative bias {rel}"
+
+
+def test_srs_respects_mask(key):
+    mask = jnp.arange(1000) < 500
+    s = bl.srs_sample(key, 1000, 100, mask=mask)
+    assert int(jnp.sum(s.mask & ~mask)) == 0
+
+
+def test_sts_exact_per_stratum_counts(key):
+    sid, x = _stream(key)
+    gc = bl.sts_counts(sid, 3)
+    np.testing.assert_array_equal(
+        np.asarray(gc), np.bincount(np.asarray(sid), minlength=3))
+    s = bl.sts_sample(jax.random.fold_in(key, 1), sid, gc, 0.25)
+    sel_per = np.bincount(np.asarray(sid)[np.asarray(s.mask)], minlength=3)
+    expect = np.ceil(0.25 * np.asarray(gc)).astype(int)
+    np.testing.assert_array_equal(sel_per, expect)
+
+
+def test_sts_never_overlooks_small_stratum(key):
+    """Stratification guarantee — contrast with SRS on the same stream."""
+    sid, x = _stream(key, skew=(0.899, 0.10, 0.001))
+    gc = bl.sts_counts(sid, 3)
+    s = bl.sts_sample(jax.random.fold_in(key, 2), sid, gc, 0.3)
+    sel_per = np.bincount(np.asarray(sid)[np.asarray(s.mask)], minlength=3)
+    assert sel_per[2] >= 1
+
+
+def test_sts_weighted_sum_unbiased(key):
+    sid, x = _stream(key)
+    gc = bl.sts_counts(sid, 3)
+    ests = []
+    for t in range(30):
+        s = bl.sts_sample(jax.random.PRNGKey(2000 + t), sid, gc, 0.25)
+        stats = bl.sample_stats(x, sid, s, 3, gc)
+        ests.append(float(err.estimate_sum(stats).value))
+    rel = abs(np.mean(ests) - float(jnp.sum(x))) / float(jnp.sum(x))
+    assert rel < 0.02, f"relative bias {rel}"
+
+
+def test_srs_error_bound_reflects_strata_risk(key):
+    """SRS single-stratum bound must be much wider than STS's stratified
+    bound on a skewed heavy-tail stream (Figure 5b's mechanism)."""
+    sid, x = _stream(key)
+    srs = bl.srs_sample(jax.random.fold_in(key, 3), 4096, 1024)
+    sts_ = bl.sts_sample(jax.random.fold_in(key, 4), sid,
+                         bl.sts_counts(sid, 3), 0.25)
+    v_srs = float(err.estimate_sum(bl.srs_stats(x, srs)).variance)
+    v_sts = float(err.estimate_sum(
+        bl.sample_stats(x, sid, sts_, 3, bl.sts_counts(sid, 3))).variance)
+    assert v_srs > 3 * v_sts

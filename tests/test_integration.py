@@ -1,0 +1,107 @@
+"""End-to-end integration tests: training loop, checkpoint resume, serving,
+and the approximate-training unbiasedness property."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import RunConfig, train
+
+
+def test_train_loss_decreases(tmp_path):
+    run = RunConfig(arch="phi4-mini-3.8b", smoke=True, steps=25, batch=8,
+                    seq_len=64, sampling_fraction=0.5,
+                    checkpoint_dir="")
+    losses = train(run)
+    assert len(losses) == 25
+    assert all(np.isfinite(l) for l in losses)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), \
+        f"no learning: {losses[:3]} → {losses[-3:]}"
+
+
+def test_train_checkpoint_resume(tmp_path):
+    d = str(tmp_path / "ckpt")
+    run = RunConfig(arch="phi4-mini-3.8b", smoke=True, steps=10, batch=4,
+                    seq_len=32, sampling_fraction=0.5, checkpoint_dir=d,
+                    checkpoint_every=5)
+    train(run)
+    from repro.train import checkpoint as ckpt
+    assert ckpt.latest_step(d) == 10
+    # resume: pipeline cursor advances past the checkpointed epoch
+    losses2 = train(RunConfig(arch="phi4-mini-3.8b", smoke=True, steps=3,
+                              batch=4, seq_len=32, sampling_fraction=0.5,
+                              checkpoint_dir=d, checkpoint_every=100))
+    assert len(losses2) == 3 and all(np.isfinite(l) for l in losses2)
+
+
+def test_weighted_loss_is_ht_estimator(key):
+    """OASRS-weighted loss over the sample ≈ unweighted loss over the full
+    window (in expectation over sampler seeds)."""
+    from repro import configs as cfgs
+    from repro.models import api
+    from repro.models.param import init_params
+    from repro.core import oasrs
+
+    cfg = cfgs.get_config("phi4-mini-3.8b", smoke=True).replace(
+        dtype=jnp.float32)
+    params = init_params(api.skeleton(cfg), key)
+    loss_fn = jax.jit(api.loss_fn(cfg))
+
+    w_seqs, seq = 32, 48
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (w_seqs, seq),
+                              0, cfg.vocab_size)
+    domains = jax.random.randint(jax.random.fold_in(key, 2), (w_seqs,),
+                                 0, 4)
+    full, _ = loss_fn(params, {"tokens": toks,
+                               "weights": jnp.ones((w_seqs,))})
+
+    spec = jax.ShapeDtypeStruct((), jnp.int32)
+    ests = []
+    for t in range(24):
+        st = oasrs.init(4, 4, spec, jax.random.PRNGKey(t))
+        st = oasrs.update_chunk(st, domains,
+                                jnp.arange(w_seqs, dtype=jnp.int32))
+        idx, w, valid = oasrs.sample_with_weights(st)
+        sel = idx[valid]
+        ws = w[valid]
+        loss, _ = loss_fn(params, {"tokens": toks[sel], "weights": ws})
+        ests.append(float(loss))
+    # ratio estimator ≈ full-window mean loss
+    assert abs(np.mean(ests) - float(full)) / float(full) < 0.02, \
+        f"{np.mean(ests)} vs {float(full)}"
+
+
+def test_server_generate_and_telemetry(key):
+    from repro import configs as cfgs
+    from repro.models import api
+    from repro.models.param import init_params
+    from repro.serve.serve_step import Server
+
+    cfg = cfgs.get_config("xlstm-350m", smoke=True).replace(
+        dtype=jnp.float32)
+    params = init_params(api.skeleton(cfg), key)
+    srv = Server(cfg, params, num_tenants=2, telemetry_capacity=16)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size)}
+    out = srv.generate(batch, steps=4,
+                       tenant_ids=jnp.array([0, 1], jnp.int32))
+    assert out.shape == (2, 5)
+    est = srv.telemetry_mean()
+    assert float(est.value) > 0.0
+
+
+def test_input_specs_cover_all_cells():
+    """input_specs() is well-formed for every applicable (arch × shape)."""
+    from repro import configs as cfgs
+    from repro.launch.specs import input_specs
+    for arch in cfgs.ARCHS:
+        for shape in cfgs.SHAPES:
+            ok, _ = cfgs.cell_applicable(arch, shape)
+            if not ok:
+                continue
+            specs = input_specs(arch, shape)
+            leaves = jax.tree_util.tree_leaves(specs)
+            assert leaves, f"{arch}×{shape} empty specs"
+            for l in leaves:
+                assert hasattr(l, "shape") and hasattr(l, "dtype")

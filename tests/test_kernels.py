@@ -1,0 +1,102 @@
+"""Pallas kernel tests: shape/dtype sweeps against the pure-jnp/py oracles.
+
+The reservoir kernel must be BIT-EXACT vs the literal Algorithm-1 oracle
+(same pre-drawn uniforms); the stats kernel matches to fp accumulation
+noise. Kernels run in interpret mode on CPU (TPU is the lowering target).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.reservoir import reservoir_fold
+from repro.kernels.stratified_stats import stratified_stats
+
+
+@pytest.mark.parametrize("m,s,block_m", [
+    (256, 4, 128), (1024, 16, 256), (2048, 64, 1024),
+    (1000, 7, 256),          # non-divisible m → padding path
+    (128, 1, 128),           # single stratum
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stats_kernel_sweep(m, s, block_m, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(m + s), 3)
+    sid = jax.random.randint(k1, (m,), 0, s)
+    x = (jax.random.normal(k2, (m,)) * 5).astype(dtype)
+    mask = jax.random.uniform(k3, (m,)) > 0.2
+    got = stratified_stats(x, sid, mask, s, block_m=block_m, interpret=True)
+    want = ref.stratified_stats_ref(x, sid, mask, s)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-2 if dtype == jnp.bfloat16
+                                   else 1e-4,
+                                   atol=1e-3)
+
+
+@pytest.mark.parametrize("m,s,n,block_m", [
+    (512, 8, 16, 256), (300, 3, 32, 128), (1024, 16, 8, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_reservoir_kernel_bit_exact(m, s, n, block_m, dtype):
+    key = jax.random.PRNGKey(m * 7 + n)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sid = jax.random.randint(k1, (m,), 0, s)
+    if dtype == jnp.int32:
+        pay = jax.random.randint(k2, (m,), 0, 1000, dtype=jnp.int32)
+    else:
+        pay = jax.random.normal(k2, (m,)).astype(dtype)
+    ua = jax.random.uniform(k3, (m,))
+    us = jax.random.uniform(k4, (m,))
+    mask = jnp.ones((m,), jnp.bool_)
+    counts = jnp.zeros((s,), jnp.int32)
+    cap = jnp.full((s,), n, jnp.int32)
+    values = jnp.zeros((s, n), dtype)
+    got_v, got_c = reservoir_fold(sid, pay, ua, us, mask, counts, cap,
+                                  values, block_m=block_m, interpret=True)
+    want_v, want_c = ref.reservoir_fold_ref(sid, pay, ua, us, mask, counts,
+                                            cap, values)
+    np.testing.assert_array_equal(np.asarray(got_c), want_c)
+    np.testing.assert_array_equal(np.asarray(got_v), want_v)
+
+
+def test_reservoir_kernel_incremental_fold():
+    """Folding two chunks == folding the concatenation (streaming use)."""
+    key = jax.random.PRNGKey(0)
+    m, s, n = 400, 4, 16
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sid = jax.random.randint(k1, (m,), 0, s)
+    pay = jax.random.normal(k2, (m,))
+    ua = jax.random.uniform(k3, (m,))
+    us = jax.random.uniform(k4, (m,))
+    mask = jnp.ones((m,), jnp.bool_)
+    counts = jnp.zeros((s,), jnp.int32)
+    cap = jnp.full((s,), n, jnp.int32)
+    values = jnp.zeros((s, n), jnp.float32)
+    h = m // 2
+    v1, c1 = reservoir_fold(sid[:h], pay[:h], ua[:h], us[:h], mask[:h],
+                            counts, cap, values, block_m=100,
+                            interpret=True)
+    v2, c2 = reservoir_fold(sid[h:], pay[h:], ua[h:], us[h:], mask[h:],
+                            c1, cap, v1, block_m=100, interpret=True)
+    vf, cf = reservoir_fold(sid, pay, ua, us, mask, counts, cap, values,
+                            block_m=100, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(cf))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(vf))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(16, 400), s=st.integers(1, 12), seed=st.integers(0, 99))
+def test_stats_kernel_property(m, s, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    sid = jax.random.randint(k1, (m,), 0, s)
+    x = jax.random.normal(k2, (m,))
+    mask = jnp.ones((m,), jnp.bool_)
+    counts, sums, sumsqs = stratified_stats(x, sid, mask, s, block_m=128,
+                                            interpret=True)
+    assert float(jnp.sum(counts)) == m
+    np.testing.assert_allclose(float(jnp.sum(sums)), float(jnp.sum(x)),
+                               rtol=1e-3, atol=1e-3)
+    assert np.all(np.asarray(sumsqs) >= -1e-5)

@@ -1,0 +1,138 @@
+"""OASRS sampling-core tests: invariants, sequential equivalence, stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import oasrs
+
+SPEC = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def _mk_stream(key, m, s, probs=None):
+    k1, k2 = jax.random.split(key)
+    sid = jax.random.choice(k1, s, (m,), p=probs)
+    x = jax.random.normal(k2, (m,)) * 10
+    return sid.astype(jnp.int32), x
+
+
+def test_counts_and_taken(key):
+    sid, x = _mk_stream(key, 500, 4)
+    st_ = oasrs.init(4, 16, SPEC, key)
+    st_ = oasrs.update_chunk(st_, sid, x)
+    np.testing.assert_array_equal(
+        np.asarray(st_.counts), np.bincount(np.asarray(sid), minlength=4))
+    np.testing.assert_array_equal(
+        np.asarray(st_.taken()),
+        np.minimum(np.asarray(st_.counts), 16))
+
+
+def test_weights_formula(key):
+    st_ = oasrs.init(3, 8, SPEC, key)
+    st_ = oasrs.update_chunk(
+        st_, jnp.array([0] * 4 + [1] * 16, jnp.int32),
+        jnp.ones((20,)))
+    w = np.asarray(st_.weights())
+    assert w[0] == 1.0          # C=4 <= N=8
+    assert w[1] == 2.0          # C=16 > N=8 → 16/8
+    assert w[2] == 1.0          # empty stratum
+
+
+def test_small_stratum_fully_taken(key):
+    """The paper's core fairness claim: tiny strata are never overlooked."""
+    sid, x = _mk_stream(key, 2048, 3, probs=jnp.array([0.8, 0.19, 0.01]))
+    st_ = oasrs.init(3, 64, SPEC, key)
+    st_ = oasrs.update_chunk(st_, sid, x)
+    c2 = int(st_.counts[2])
+    assert c2 > 0
+    assert int(st_.taken()[2]) == min(c2, 64)
+
+
+def test_mask_ignores_items(key):
+    sid, x = _mk_stream(key, 300, 4)
+    mask = jnp.arange(300) < 100
+    st_ = oasrs.init(4, 16, SPEC, key)
+    st_ = oasrs.update_chunk(st_, sid, x, mask)
+    assert int(jnp.sum(st_.counts)) == 100
+
+
+def test_reservoir_contains_only_stream_values(key):
+    sid, x = _mk_stream(key, 400, 2)
+    st_ = oasrs.init(2, 32, SPEC, key)
+    st_ = oasrs.update_chunk(st_, sid, x)
+    vals = np.asarray(st_.values)
+    mask = np.asarray(st_.slot_mask())
+    xs = np.asarray(x)
+    for s in range(2):
+        stratum_vals = xs[np.asarray(sid) == s]
+        for v in vals[s][mask[s]]:
+            assert np.any(np.isclose(stratum_vals, v))
+
+
+def test_chunked_matches_sequential_distribution(key):
+    """Chunk fold and item-at-a-time fold draw from the same distribution:
+    compare per-item inclusion frequencies over many seeds."""
+    m, s, n = 60, 1, 8
+    sid = jnp.zeros((m,), jnp.int32)
+    x = jnp.arange(m, dtype=jnp.float32)
+    trials = 300
+    inc_chunk = np.zeros(m)
+    inc_seq = np.zeros(m)
+    fold_c = jax.jit(oasrs.update_chunk)
+    fold_s = jax.jit(oasrs.update_stream)
+    for t in range(trials):
+        k = jax.random.PRNGKey(t)
+        stc = fold_c(oasrs.init(s, n, SPEC, k), sid, x)
+        sts = fold_s(oasrs.init(s, n, SPEC, jax.random.fold_in(k, 1)),
+                     sid, x)
+        for st_ in (stc,):
+            vals = np.asarray(st_.values[0][np.asarray(st_.slot_mask()[0])])
+            inc_chunk[vals.astype(int)] += 1
+        vals = np.asarray(sts.values[0][np.asarray(sts.slot_mask()[0])])
+        inc_seq[vals.astype(int)] += 1
+    # uniform inclusion: every item ~ n/m = 8/60; tolerance 5 sigma
+    p = n / m
+    sigma = np.sqrt(p * (1 - p) / trials)
+    assert np.all(np.abs(inc_chunk / trials - p) < 5 * sigma + 0.02)
+    assert np.all(np.abs(inc_seq / trials - p) < 5 * sigma + 0.02)
+    # and the two modes agree with each other
+    assert np.abs(inc_chunk - inc_seq).max() / trials < 10 * sigma + 0.02
+
+
+def test_pipelined_chunks_equiv_counts(key):
+    sid, x = _mk_stream(key, 256, 4)
+    st1 = oasrs.update_pipelined_chunks(
+        oasrs.init(4, 8, SPEC, key), sid, x, lane=64)
+    st2 = oasrs.update_chunk(oasrs.init(4, 8, SPEC, key), sid, x)
+    np.testing.assert_array_equal(np.asarray(st1.counts),
+                                  np.asarray(st2.counts))
+
+
+def test_reset_window(key):
+    sid, x = _mk_stream(key, 100, 2)
+    st_ = oasrs.update_chunk(oasrs.init(2, 8, SPEC, key), sid, x)
+    st_ = oasrs.reset_window(st_)
+    assert int(jnp.sum(st_.counts)) == 0
+    assert int(jnp.sum(st_.slot_mask())) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 200), s=st.integers(1, 8), n=st.integers(1, 32),
+       seed=st.integers(0, 2**30))
+def test_invariants_property(m, s, n, seed):
+    """Pytree invariants hold for arbitrary stream shapes."""
+    k = jax.random.PRNGKey(seed)
+    sid = jax.random.randint(k, (m,), 0, s)
+    x = jnp.ones((m,), jnp.float32)
+    st_ = oasrs.update_chunk(oasrs.init(s, n, SPEC, k), sid, x)
+    counts = np.asarray(st_.counts)
+    assert counts.sum() == m
+    taken = np.asarray(st_.taken())
+    assert np.all(taken == np.minimum(counts, n))
+    assert np.all(np.asarray(st_.slot_mask()).sum(1) == taken)
+    w = np.asarray(st_.weights())
+    assert np.all(w >= 1.0)
+    # HT identity: Σ_i W_i·Y_i == C_i when C_i > N_i (up to float)
+    big = counts > n
+    np.testing.assert_allclose(w[big] * taken[big], counts[big], rtol=1e-5)

@@ -1,0 +1,80 @@
+"""Linear-query tests: SUM/MEAN/COUNT/HISTOGRAM against exact values."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import oasrs, query
+
+SPEC = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def _full_take_state(key, sid, x, num_strata):
+    """Reservoirs large enough to take everything → estimators exact."""
+    st_ = oasrs.init(num_strata, int(sid.shape[0]), SPEC, key)
+    return oasrs.update_chunk(st_, sid, x)
+
+
+def test_sum_mean_exact_on_full_take(key):
+    sid = jax.random.randint(key, (300,), 0, 5)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (300,)) * 3 + 7
+    st_ = _full_take_state(key, sid, x, 5)
+    np.testing.assert_allclose(query.query_sum(st_).value, jnp.sum(x),
+                               rtol=1e-5)
+    np.testing.assert_allclose(query.query_mean(st_).value, jnp.mean(x),
+                               rtol=1e-5)
+
+
+def test_count_query(key):
+    sid = jax.random.randint(key, (500,), 0, 4)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (500,))
+    st_ = _full_take_state(key, sid, x, 4)
+    est = query.query_count(st_, lambda v: v > 0.0)
+    np.testing.assert_allclose(est.value, jnp.sum(x > 0), rtol=1e-5)
+
+
+def test_histogram_query(key):
+    sid = jax.random.randint(key, (800,), 0, 3)
+    x = jax.random.uniform(jax.random.fold_in(key, 1), (800,)) * 10
+    st_ = _full_take_state(key, sid, x, 3)
+    edges = jnp.array([0.0, 2.5, 5.0, 7.5, 10.0])
+    est = query.query_histogram(st_, edges)
+    exact, _ = jnp.histogram(x, bins=edges)
+    np.testing.assert_allclose(est.value, exact.astype(jnp.float32),
+                               rtol=1e-5)
+    assert est.value.shape == (4,)
+
+
+def test_group_means(key):
+    sid = jax.random.randint(key, (600,), 0, 6)
+    x = sid.astype(jnp.float32) * 10 + 1
+    st_ = _full_take_state(key, sid, x, 6)
+    est = query.group_means(st_)
+    np.testing.assert_allclose(
+        est.value, jnp.arange(6, dtype=jnp.float32) * 10 + 1, rtol=1e-5)
+    np.testing.assert_allclose(est.variance, 0.0, atol=1e-6)
+
+
+def test_sampled_estimates_close(key):
+    """Sampled (not full-take) estimates land within their own 3σ."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    sid = jax.random.choice(k1, 3, (8192,),
+                            p=jnp.array([0.5, 0.3, 0.2])).astype(jnp.int32)
+    x = jnp.array([5.0, 50.0, 500.0])[sid] + \
+        jax.random.normal(k2, (8192,))
+    st_ = oasrs.update_chunk(oasrs.init(3, 128, SPEC, k3), sid, x)
+    for est, exact in [(query.query_sum(st_), float(jnp.sum(x))),
+                       (query.query_mean(st_), float(jnp.mean(x)))]:
+        bound = float(est.error_bound(0.997))
+        assert abs(float(est.value) - exact) < max(bound, 1e-3), \
+            f"{float(est.value)} vs {exact} bound {bound}"
+
+
+def test_exact_stats_native_baseline(key):
+    sid = jax.random.randint(key, (400,), 0, 4)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (400,)) * 2
+    stats = query.exact_stats(x, sid, 4)
+    np.testing.assert_allclose(np.asarray(stats.sums).sum(),
+                               float(jnp.sum(x)), rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(stats.counts),
+                                  np.bincount(np.asarray(sid), minlength=4))

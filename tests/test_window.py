@@ -1,0 +1,78 @@
+"""Sliding-window tests (§2.2/§3.1): pane ring, eviction, merged queries."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import oasrs, query, window
+
+SPEC = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def _interval(key, mean, m=200, s=2, cap=512):
+    sid = jax.random.randint(key, (m,), 0, s)
+    x = jnp.full((m,), mean) + jax.random.normal(
+        jax.random.fold_in(key, 1), (m,))
+    st_ = oasrs.init(s, cap, SPEC, jax.random.fold_in(key, 2))
+    return oasrs.update_chunk(st_, sid, x), float(jnp.sum(x))
+
+
+def test_window_sum_over_live_intervals(key):
+    w = window.init(3, 2, 512, SPEC, key)
+    totals = []
+    for e in range(2):
+        iv, tot = _interval(jax.random.fold_in(key, e), mean=float(e + 1))
+        w = window.slide(w, iv)
+        totals.append(tot)
+    est = window.query_sum(w)
+    np.testing.assert_allclose(float(est.value), sum(totals), rtol=1e-4)
+
+
+def test_window_eviction(key):
+    w = window.init(2, 2, 512, SPEC, key)     # window of 2 intervals
+    totals = []
+    for e in range(5):
+        iv, tot = _interval(jax.random.fold_in(key, 10 + e),
+                            mean=float(e * 100))
+        w = window.slide(w, iv)
+        totals.append(tot)
+    est = window.query_sum(w)
+    np.testing.assert_allclose(float(est.value), totals[-1] + totals[-2],
+                               rtol=1e-4)
+
+
+def test_window_mean_matches_exact(key):
+    w = window.init(4, 2, 512, SPEC, key)
+    all_x = []
+    for e in range(4):
+        k = jax.random.fold_in(key, 20 + e)
+        sid = jax.random.randint(k, (150,), 0, 2)
+        x = jax.random.normal(jax.random.fold_in(k, 1), (150,)) + 5
+        all_x.append(np.asarray(x))
+        iv = oasrs.update_chunk(
+            oasrs.init(2, 512, SPEC, jax.random.fold_in(k, 2)), sid, x)
+        w = window.slide(w, iv)
+    est = window.query_mean(w)
+    np.testing.assert_allclose(float(est.value),
+                               np.concatenate(all_x).mean(), rtol=1e-4)
+
+
+def test_with_capacity_adaptive_feedback(key):
+    w = window.init(2, 3, 16, SPEC, key, max_capacity=64)
+    new_cap = jnp.array([32, 8, 64], jnp.int32)
+    w = window.with_capacity(w, new_cap)
+    np.testing.assert_array_equal(np.asarray(w.intervals.capacity[0]),
+                                  np.asarray(new_cap))
+
+
+def test_window_jit_slide(key):
+    """The whole window maintenance jits (production property)."""
+    w = window.init(3, 2, 64, SPEC, key)
+    iv, _ = _interval(key, 1.0, cap=64)
+
+    @jax.jit
+    def step(w, iv):
+        w = window.slide(w, iv)
+        return w, window.query_sum(w).value
+
+    w, v = step(w, iv)
+    assert np.isfinite(float(v))
