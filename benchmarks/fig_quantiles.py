@@ -1,0 +1,75 @@
+"""Quantile-engine benchmark: accuracy & latency vs exact percentiles.
+
+Beyond-paper figure for the nonlinear query subsystem: per-protocol
+flow-byte percentiles (p50/p90/p99) on the network-traffic source (§6.2
+stream shape), comparing
+
+* ``oasrs_sort``  — sorted-cumulative-weight quantile over the OASRS
+  sample (+ bootstrap bounds),
+* ``oasrs_hist``  — sort-free histogram-refinement estimator (the
+  ``weighted_hist`` kernel path of the TPU lowering),
+* ``exact``       — full ``jnp.quantile`` over the raw window (native).
+
+Rows: ``fig_q.<system>.capN,us_per_call,rel_err=...`` — relative error
+averaged over windows and quantile levels, plus CI-coverage of the
+bootstrap bounds for the sampled systems.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import oasrs, quantile as qt
+from repro.stream import NetflowSource, StreamAggregator
+
+ITEMS = 65_536
+QS = jnp.array([0.5, 0.9, 0.99])
+SPEC = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def run() -> list:
+    rows = []
+    agg = StreamAggregator(NetflowSource(), seed=11)
+    wins = [agg.interval_chunk(e, ITEMS) for e in range(4)]
+
+    @jax.jit
+    def exact_q(values):
+        return jnp.quantile(values, QS)
+
+    def make_approx(cap, method):
+        @jax.jit
+        def fn(values, stratum_ids, key):
+            st = oasrs.init(3, cap, SPEC, key)
+            st = oasrs.update_chunk(st, stratum_ids, values)
+            return qt.query_quantile(st, QS, method=method,
+                                     num_replicates=32)
+        return fn
+
+    us_exact = time_call(exact_q, wins[0].values, warmup=1, iters=5)
+    rows.append(emit("fig_q.exact", us_exact, "rel_err=0.0"))
+
+    for cap in (512, 2048):
+        for method in ("sort", "hist"):
+            fn = make_approx(cap, method)
+            us = time_call(fn, wins[0].values, wins[0].stratum_ids,
+                           jax.random.PRNGKey(0), warmup=1, iters=5)
+            errs, covered, total = [], 0, 0
+            for i, w in enumerate(wins):
+                est = fn(w.values, w.stratum_ids, jax.random.PRNGKey(i))
+                ex = np.asarray(exact_q(w.values))
+                errs.append(np.abs(np.asarray(est.value) - ex) / ex)
+                lo, hi = est.interval(0.95)
+                covered += int(np.sum((np.asarray(lo) <= ex)
+                                      & (ex <= np.asarray(hi))))
+                total += ex.shape[0]
+            rows.append(emit(
+                f"fig_q.oasrs_{method}.cap{cap}", us,
+                f"rel_err={np.mean(errs):.5f};"
+                f"ci95_cover={covered}/{total}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

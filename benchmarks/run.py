@@ -14,7 +14,7 @@ def main() -> None:
     from benchmarks import (bench_kernels, bench_train, fig5_microbench,
                             fig6_rates_windows, fig7_scale_skew,
                             fig8_means_over_time, fig9_network_traffic,
-                            fig10_taxi)
+                            fig10_taxi, fig_quantiles)
     modules = [
         ("fig5(a-c) microbenchmarks", fig5_microbench),
         ("fig6 arrival rates + windows", fig6_rates_windows),
@@ -22,6 +22,7 @@ def main() -> None:
         ("fig8 means over time", fig8_means_over_time),
         ("fig9 network traffic case study", fig9_network_traffic),
         ("fig10 taxi case study", fig10_taxi),
+        ("quantile engine accuracy/latency", fig_quantiles),
         ("kernel bench", bench_kernels),
         ("training-plane bench", bench_train),
     ]

@@ -14,6 +14,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import baselines as bl
 from repro.core import error as err
 from repro.core import oasrs, query
@@ -79,6 +81,35 @@ def main():
         print(f"{epoch:3d} {'sts':<10} {'':>29} "
               f"{float(sts_est.value) / 1e9:10.3f}"
               f"±{float(sts_est.error_bound(0.95)) / 1e9:.3f}GB {dt:7.1f}")
+
+        # --- nonlinear queries: flow-size percentiles + top talkers ---
+        qs = jnp.array([0.5, 0.9, 0.99])
+        t0 = time.perf_counter()
+        q_est = query.query_quantile(state, qs, num_replicates=32)
+        jax.block_until_ready(q_est.value)
+        dt = (time.perf_counter() - t0) * 1e3
+        exact_q = np.quantile(np.asarray(chunk.values), np.asarray(qs))
+        line = "  ".join(
+            f"p{int(q * 100)}={float(v) / 1e3:.1f}"
+            f"±{float(b) / 1e3:.1f}KB (exact {e / 1e3:.1f})"
+            for q, v, b, e in zip(qs, q_est.value,
+                                  q_est.error_bound(0.95), exact_q))
+        print(f"{epoch:3d} {'quantiles':<10} {line} {dt:7.1f}ms")
+
+        # Heavy hitters over coarse flow-size classes (log2 buckets): the
+        # Eq. 6-bounded COUNT of the k most frequent classes.
+        t0 = time.perf_counter()
+        hh = query.query_heavy_hitters(
+            state, 3, extract=lambda v: jnp.floor(jnp.log2(
+                jnp.maximum(v, 1.0))))
+        jax.block_until_ready(hh.estimate.value)
+        dt = (time.perf_counter() - t0) * 1e3
+        line = "  ".join(
+            f"2^{int(k)}B×{float(v) / 1e3:.1f}k"
+            f"±{float(b) / 1e3:.1f}k"
+            for k, v, b in zip(hh.keys, hh.estimate.value,
+                               hh.estimate.error_bound(0.95)))
+        print(f"{epoch:3d} {'top-sizes':<10} {line} {dt:7.1f}ms")
 
 
 if __name__ == "__main__":

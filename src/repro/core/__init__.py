@@ -1,14 +1,17 @@
 """StreamApprox core: OASRS sampling, error bounds, queries, baselines."""
 from repro.core import (adaptive, baselines, distributed, error, oasrs,
-                        query, window)
+                        quantile, query, sketches, window)
 from repro.core.error import Estimate, StratumStats
 from repro.core.oasrs import (OASRSState, init, reset_window, update_chunk,
                               update_item, update_pipelined_chunks,
                               update_stream)
+from repro.core.quantile import SampleView
+from repro.core.sketches import HeavyHitters
 
 __all__ = [
-    "adaptive", "baselines", "distributed", "error", "oasrs", "query",
-    "window", "Estimate", "StratumStats", "OASRSState", "init",
+    "adaptive", "baselines", "distributed", "error", "oasrs", "quantile",
+    "query", "sketches", "window", "Estimate", "StratumStats",
+    "OASRSState", "SampleView", "HeavyHitters", "init",
     "reset_window", "update_chunk", "update_item",
     "update_pipelined_chunks", "update_stream",
 ]

@@ -111,7 +111,7 @@ def sts_sample(key: jax.Array, stratum_ids: jax.Array,
     idx = jnp.arange(m, dtype=jnp.int32)
     is_start = jnp.concatenate(
         [jnp.ones((1,), jnp.bool_), sid_sorted[1:] != sid_sorted[:-1]])
-    group_start = jnp.maximum.accumulate(jnp.where(is_start, idx, 0))
+    group_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
     rank_sorted = idx - group_start
     rank = jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)
 

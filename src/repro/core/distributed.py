@@ -95,6 +95,101 @@ def _merge_partials(local: err.Estimate, axis_names: AxisNames,
                         variance=var * inflate * inflate)
 
 
+# ---------------------------------------------------------------------------
+# Nonlinear queries: single-psum merges of per-shard partial sketches.
+# Each keeps the ingest contract intact — collectives appear only at query
+# time, and each query issues exactly ONE psum (of a small tuple).
+# ---------------------------------------------------------------------------
+
+def global_histogram(view, edges: jax.Array, axis_names: AxisNames,
+                     alive: Optional[jax.Array] = None,
+                     use_pallas: bool = False) -> err.Estimate:
+    """Merge per-shard per-bin COUNT estimates with one psum.
+
+    ``view`` is the shard-local :class:`~repro.core.quantile.SampleView`;
+    each (shard × stratum) cell is an independently-sampled stratum, so
+    the per-bin values and Eq. 6 variances both sum exactly (Eq. 5).
+    """
+    from repro.core import quantile as qt
+    local = qt.cell_counts(view, edges, use_pallas=use_pallas)
+    return _merge_partials(local, axis_names, alive)
+
+
+def global_key_counts(view, keys: jax.Array, axis_names: AxisNames,
+                      alive: Optional[jax.Array] = None) -> err.Estimate:
+    """Merge per-shard per-key COUNT estimates (heavy-hitter phase 2).
+
+    ``keys`` must be replicated across shards (candidates come from any
+    shard's local top-k, domain knowledge, or the previous window). The
+    per-key frequency is a linear query, so values and variances merge
+    with one psum.
+    """
+    from repro.core import sketches as sk
+    local = sk.key_counts(view, keys)
+    return _merge_partials(local, axis_names, alive)
+
+
+def global_quantile(view, qs, value_range, axis_names,
+                    num_bins: int = 2048,
+                    num_replicates: int = 0,
+                    key: Optional[jax.Array] = None) -> err.Estimate:
+    """Global quantiles from per-shard weighted histograms — one psum.
+
+    Each shard bins its HT-weighted sample over the (replicated)
+    ``value_range = (lo, hi)`` bracket into ``num_bins`` fine bins; the
+    single psum merges ``[R+1, B]`` histograms (replicate 0 is the actual
+    sample, the rest stratified-bootstrap resamples), the below-range
+    mass and the total weight in one collective. Every shard then inverts
+    the identical global CDF, so the result is replicated.
+
+    ``value_range`` typically comes from the previous window (or domain
+    bounds); mass outside the bracket is still accounted for in
+    ``below``/``total``, and targets beyond the bracket clamp to its
+    edges. Resolution is ``(hi − lo) / num_bins``.
+    """
+    from repro.core import quantile as qt
+    from repro.kernels import ops
+    qs = jnp.atleast_1d(jnp.asarray(qs, jnp.float32))
+    lo, hi = value_range
+    edges = lo + (hi - lo) * jnp.linspace(0.0, 1.0, num_bins + 1)
+    g, n = view.values.shape
+    w = jnp.broadcast_to(view.weights()[:, None], (g, n))
+    valid = view.slot_mask()
+    gid = jnp.broadcast_to(
+        jnp.arange(g, dtype=jnp.int32)[:, None], (g, n))
+
+    def binned(values):
+        # Same fused pass (and bin convention) as the local "hist" path.
+        wv = jnp.where(valid, w, 0.0)
+        whist, _ = ops.weighted_histogram(
+            values.reshape(-1), gid.reshape(-1), w.reshape(-1),
+            valid.reshape(-1), edges, g, use_pallas=False)
+        hist = jnp.sum(whist, axis=0)                         # [B]
+        below = jnp.sum(jnp.where(values < lo, wv, 0.0))
+        return hist, below, jnp.sum(wv)
+
+    h0, b0, t0 = binned(view.values)
+    hists, belows, totals = h0[None], b0[None], t0[None]
+    if num_replicates > 0:
+        if key is None:
+            raise ValueError("pass key= for bootstrap replicates")
+        reps = jax.vmap(
+            lambda k: binned(qt.bootstrap_resample(view, k)))(
+                jax.random.split(key, num_replicates))
+        hists = jnp.concatenate([hists, reps[0]])
+        belows = jnp.concatenate([belows, reps[1]])
+        totals = jnp.concatenate([totals, reps[2]])
+
+    g_hist, g_below, g_total = _psum((hists, belows, totals), axis_names)
+
+    invert = jax.vmap(lambda h, b, t: qt.invert_weighted_cdf(
+        h, edges, b, qs * jnp.maximum(t, 1e-20)))
+    values = invert(g_hist, g_below, g_total)                 # [R+1, Q]
+    variance = (jnp.var(values[1:], axis=0, ddof=1)
+                if num_replicates > 1 else jnp.zeros_like(values[0]))
+    return err.Estimate(value=values[0], variance=variance)
+
+
 def sts_global_counts(local_counts: jax.Array,
                       axis_names: AxisNames) -> jax.Array:
     """The STS baseline's pass-1 synchronization barrier (all-reduce).

@@ -123,6 +123,29 @@ def estimate_mean(stats: StratumStats) -> Estimate:
                     variance=var_mean(stats))
 
 
+def estimate_counts(n: jax.Array, counts: jax.Array,
+                    taken: jax.Array) -> Estimate:
+    """Vectorized per-cell COUNT estimates (Eqs. 2–3, 6 on indicators).
+
+    ``n [S, B]`` is the number of *sampled* items of stratum ``s`` falling
+    in cell ``b`` (a histogram bin, a candidate heavy-hitter key, ...).
+    Each cell is an independent linear query on its 0/1 indicator, whose
+    per-stratum moments are ``sums = sumsqs = n`` — so the whole ``[B]``
+    vector of estimates and Eq. 6 variances comes out of one broadcasted
+    pass instead of a Python loop over cells.
+    """
+    n = n.astype(jnp.float32)
+    c = counts.astype(jnp.float32)[:, None]                  # [S, 1]
+    y = jnp.maximum(taken, 1).astype(jnp.float32)[:, None]   # [S, 1]
+    w = jnp.where(counts[:, None] > taken[:, None], c / y, 1.0)
+    value = jnp.sum(w * n, axis=0)                           # [B]
+    # Indicator variance: ss = Σ1² − Y·mean² = n − n²/Y  (Eq. 7 on 0/1s).
+    ss = jnp.maximum(n - n * n / y, 0.0)
+    s2 = jnp.where(taken[:, None] > 1, ss / jnp.maximum(y - 1.0, 1.0), 0.0)
+    per = c * jnp.maximum(c - y, 0.0) * s2 / y               # Eq. 6 per cell
+    return Estimate(value=value, variance=jnp.sum(per, axis=0))
+
+
 def merge_stats(*stats: StratumStats) -> StratumStats:
     """Concatenate independent stratum summaries (Eq. 5: variances add).
 

@@ -70,22 +70,43 @@ def query_count(state: OASRSState,
 
 
 def query_histogram(state: OASRSState, edges: jax.Array,
-                    extract: Extract = lambda v: v) -> err.Estimate:
+                    extract: Extract = lambda v: v,
+                    use_pallas: bool = False) -> err.Estimate:
     """Approximate weighted histogram: per-bin COUNT estimates.
 
-    Returns an Estimate whose ``value``/``variance`` are ``[num_bins]``
-    vectors (each bin is an independent linear query on its indicator).
+    One fused pass (the ``weighted_hist`` kernel, or its jnp oracle)
+    produces the per-(stratum, bin) sampled counts; the vectorized
+    Eq. 6 machinery turns them into ``[num_bins]`` value/variance vectors
+    — replacing the former Python loop over bins.
     """
-    num_bins = edges.shape[0] - 1
+    from repro.core import quantile as qt
+    return qt.cell_counts(qt.sample_view(state, extract), edges,
+                          use_pallas=use_pallas)
 
-    def one_bin(lo, hi, last):
-        in_bin = lambda x: (x >= lo) & jnp.where(last, x <= hi, x < hi)
-        return query_count(state, in_bin, extract)
 
-    ests = [one_bin(edges[b], edges[b + 1], b == num_bins - 1)
-            for b in range(num_bins)]
-    return err.Estimate(value=jnp.stack([e.value for e in ests]),
-                        variance=jnp.stack([e.variance for e in ests]))
+def query_quantile(state: OASRSState, qs, extract: Extract = lambda v: v,
+                   **kw) -> err.Estimate:
+    """Approximate quantiles (nonlinear — bootstrap bounds).
+
+    Thin façade over :func:`repro.core.quantile.query_quantile`; see
+    there for estimator and bound details.
+    """
+    from repro.core import quantile as qt
+    return qt.query_quantile(state, qs, extract=extract, **kw)
+
+
+def query_heavy_hitters(state: OASRSState, k: int,
+                        extract: Extract = lambda v: v):
+    """Approximate top-k heavy hitters (see ``repro.core.sketches``)."""
+    from repro.core import sketches as sk
+    return sk.query_heavy_hitters(state, k, extract=extract)
+
+
+def query_distinct(state: OASRSState, extract: Extract = lambda v: v,
+                   **kw) -> err.Estimate:
+    """Approximate distinct count (see ``repro.core.sketches``)."""
+    from repro.core import sketches as sk
+    return sk.query_distinct(state, extract=extract, **kw)
 
 
 def query_linear(state: OASRSState,

@@ -1,0 +1,157 @@
+"""Nonlinear approximate queries II: heavy hitters and distinct counts.
+
+Both operate on the :class:`~repro.core.quantile.SampleView` projection of
+OASRS samples, so they work unchanged on single states, merged sliding
+windows and per-shard partials.
+
+**Heavy hitters / top-k** — a two-phase estimator that keeps the error
+bounds honest despite the nonlinear selection step:
+
+1. *Candidate generation* (nonlinear, no bounds): distinct sampled keys
+   are found with one sort + segment-sum of HT weights; the ``k``
+   heaviest become the candidates. A key whose true stream frequency is
+   large is sampled with overwhelming probability, so recall degrades
+   gracefully with the sampling fraction (property-tested on Zipf
+   streams).
+2. *Frequency estimation* (linear, Eq. 6 bounds): conditional on the
+   candidate set, each key's stream frequency is a COUNT of the indicator
+   ``x == key`` — a plain linear query — so the vectorized
+   :func:`repro.core.error.estimate_counts` supplies exact HT values and
+   Eq. 6 variances per key.
+
+**Distinct count** — sample-based species estimation: the Chao1 estimator
+``D̂ = d + f₁(f₁−1)/(2(f₂+1))`` on the sampled frequency spectrum
+(``d`` distinct sampled keys, ``f₁`` singletons, ``f₂`` doubletons), with
+a stratified-bootstrap variance like the quantile path. Chao1 is a lower
+bound under uniform detectability — the honest choice for a
+reservoir-sample sketch; the bootstrap spread reports its stability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import error as err
+from repro.core import quantile as qt
+from repro.core.oasrs import OASRSState
+from repro.utils import Pytree, dataclass_pytree
+
+Extract = Callable[[Pytree], jax.Array]
+
+_BIG = 3.0e38
+
+
+@dataclass_pytree
+@dataclasses.dataclass
+class HeavyHitters:
+    """Top-k result: candidate keys with per-key COUNT estimates.
+
+    ``keys [k]`` are the candidate values (padded with ``+BIG`` when the
+    sample holds fewer than ``k`` distinct keys — padded entries carry
+    zero ``estimate.value``); ``estimate`` holds the Eq. 6-bounded stream
+    frequencies, and ``sample_weight [k]`` the raw HT mass used for the
+    ranking.
+    """
+    keys: jax.Array
+    estimate: err.Estimate
+    sample_weight: jax.Array
+
+
+def _view(source, extract: Extract) -> qt.SampleView:
+    if isinstance(source, OASRSState):
+        return qt.sample_view(source, extract)
+    return source
+
+
+def _segments(x: jax.Array, valid: jax.Array):
+    """Sort-based distinct-value segmentation of a flat slot buffer.
+
+    Returns ``(order, seg, seg_keys)``: the sort permutation, the dense
+    segment id of every *sorted* slot, and ``seg_keys[j]`` — segment
+    ``j``'s value (``+BIG`` for unused segment slots and for the segment
+    collecting dead slots).
+    """
+    m = x.shape[0]
+    xk = jnp.where(valid, x, _BIG)
+    order = jnp.argsort(xk)
+    xs = xk[order]
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), xs[1:] != xs[:-1]])
+    seg = jnp.cumsum(is_start.astype(jnp.int32)) - 1          # [M]
+    seg_keys = jnp.full((m,), _BIG, jnp.float32).at[seg].min(
+        xs.astype(jnp.float32))
+    return order, seg, seg_keys
+
+
+def query_heavy_hitters(source, k: int, extract: Extract = lambda v: v
+                        ) -> HeavyHitters:
+    """Approximate top-k heaviest keys with Eq. 6 frequency bounds."""
+    view = _view(source, extract)
+    x, w, valid, _ = view.flat()
+    order, seg, seg_keys = _segments(x, valid)
+    ws = jnp.where(valid, w, 0.0)[order]
+    seg_w = jnp.zeros((x.shape[0],), jnp.float32).at[seg].add(ws)
+    top_w, top_i = jax.lax.top_k(seg_w, k)
+    keys = seg_keys[top_i]                                    # [k]
+    est = key_counts(view, keys)
+    return HeavyHitters(keys=keys, estimate=est, sample_weight=top_w)
+
+
+def key_counts(view: qt.SampleView, keys: jax.Array) -> err.Estimate:
+    """Linear per-key COUNT estimates for a fixed candidate key vector.
+
+    ``n_gk`` (sampled matches per cell × key) feeds the vectorized Eq. 6
+    machinery; this is the piece the distributed path merges with one
+    ``psum`` (see :func:`repro.core.distributed.global_key_counts`).
+    """
+    match = (view.values[:, :, None] == keys[None, None, :])
+    match = match & view.slot_mask()[:, :, None]
+    n_gk = jnp.sum(match.astype(jnp.float32), axis=1)         # [G, K]
+    return err.estimate_counts(n_gk, view.counts, view.taken)
+
+
+# ---------------------------------------------------------------------------
+# Distinct count.
+# ---------------------------------------------------------------------------
+
+def _chao1(x: jax.Array, valid: jax.Array) -> jax.Array:
+    """Bias-corrected Chao1 on the sampled frequency spectrum."""
+    order, seg, _ = _segments(x, valid)
+    # Dead slots all land in the +BIG segment but add 0 to its frequency,
+    # so the padding segment drops out of every spectrum count below.
+    freq = jnp.zeros((x.shape[0],), jnp.int32).at[seg].add(
+        valid[order].astype(jnp.int32))
+    d = jnp.sum(freq > 0).astype(jnp.float32)
+    f1 = jnp.sum(freq == 1).astype(jnp.float32)
+    f2 = jnp.sum(freq == 2).astype(jnp.float32)
+    return d + f1 * (f1 - 1.0) / (2.0 * (f2 + 1.0))
+
+
+def query_distinct(source, extract: Extract = lambda v: v,
+                   num_replicates: int = 64,
+                   key: Optional[jax.Array] = None) -> err.Estimate:
+    """Approximate distinct count with bootstrap spread.
+
+    Chao1 species estimator on the pooled sample — a principled *lower
+    bound* on the stream's distinct count from a without-replacement
+    sample; variance is the stratified-bootstrap replicate variance.
+    """
+    if isinstance(source, OASRSState) and key is None:
+        key = jax.random.fold_in(source.key, 0xD157)
+    view = _view(source, extract)
+    if key is None and num_replicates > 0:
+        raise ValueError("pass key= when querying a bare SampleView")
+    valid = view.slot_mask().reshape(-1)
+    value = _chao1(view.values.reshape(-1), valid)
+    if num_replicates > 0:
+        def one(k):
+            xb = qt.bootstrap_resample(view, k).reshape(-1)
+            return _chao1(xb, valid)
+        reps = jax.vmap(one)(jax.random.split(key, num_replicates))
+        variance = jnp.var(reps, ddof=1)
+    else:
+        variance = jnp.zeros(())
+    return err.Estimate(value=value, variance=variance)

@@ -107,3 +107,70 @@ def query_sum(window: WindowState, extract=lambda v: v) -> err.Estimate:
 
 def query_mean(window: WindowState, extract=lambda v: v) -> err.Estimate:
     return err.estimate_mean(window_stats(window, extract))
+
+
+# ---------------------------------------------------------------------------
+# Merged-interval nonlinear queries (quantiles, heavy hitters, distinct).
+# ---------------------------------------------------------------------------
+
+def _live_mask(window: WindowState) -> jax.Array:
+    k = jax.tree_util.tree_leaves(window.intervals)[0].shape[0]
+    age = (jnp.arange(k, dtype=jnp.int32) - window.cursor) % jnp.maximum(k, 1)
+    return age >= (k - window.filled)
+
+
+def sample_view(window: WindowState,
+                extract: Callable[[Pytree], jax.Array] = lambda v: v):
+    """Merged weighted sample of all live intervals.
+
+    Flattens the ring to ``K·S`` independently-sampled cells (dead
+    intervals get zero counts and therefore zero weight/validity), so
+    every nonlinear estimator in ``repro.core.quantile``/``sketches``
+    applies to the whole window unchanged — the window merge *is* the
+    cell concatenation, exactly like the linear Eq. 5 merge.
+    """
+    from repro.core import quantile as qt
+    iv = window.intervals
+    xs = extract(iv.values)                       # [K, S, N]
+    k, s, n = xs.shape
+    live = _live_mask(window)
+    counts = jnp.where(live[:, None], iv.counts, 0)
+    taken = jnp.minimum(counts, iv.capacity)
+    return qt.SampleView(values=xs.astype(jnp.float32).reshape(k * s, n),
+                         counts=counts.reshape(-1),
+                         taken=taken.reshape(-1))
+
+
+def _window_key(window: WindowState, salt: int) -> jax.Array:
+    return jax.random.fold_in(window.intervals.key[0], salt)
+
+
+def query_quantile(window: WindowState, qs, extract=lambda v: v,
+                   **kw) -> err.Estimate:
+    """Windowed approximate quantiles over the merged intervals."""
+    from repro.core import quantile as qt
+    kw.setdefault("key", _window_key(window, 0x51A17))
+    return qt.query_quantile(sample_view(window, extract), qs, **kw)
+
+
+def query_histogram(window: WindowState, edges: jax.Array,
+                    extract=lambda v: v,
+                    use_pallas: bool = False) -> err.Estimate:
+    """Windowed per-bin COUNT estimates (K·S cells, Eq. 6 per bin)."""
+    from repro.core import quantile as qt
+    return qt.cell_counts(sample_view(window, extract), edges,
+                          use_pallas=use_pallas)
+
+
+def query_heavy_hitters(window: WindowState, k: int, extract=lambda v: v):
+    """Windowed approximate top-k heavy hitters."""
+    from repro.core import sketches as sk
+    return sk.query_heavy_hitters(sample_view(window, extract), k)
+
+
+def query_distinct(window: WindowState, extract=lambda v: v,
+                   **kw) -> err.Estimate:
+    """Windowed approximate distinct count."""
+    from repro.core import sketches as sk
+    kw.setdefault("key", _window_key(window, 0xD157))
+    return sk.query_distinct(sample_view(window, extract), **kw)

@@ -18,6 +18,7 @@ from repro.core.oasrs import OASRSState
 from repro.kernels import ref
 from repro.kernels.reservoir import reservoir_fold
 from repro.kernels.stratified_stats import stratified_stats
+from repro.kernels.weighted_hist import weighted_hist
 
 
 def _interpret() -> bool:
@@ -34,6 +35,26 @@ def stratum_moments(values: jax.Array, stratum_ids: jax.Array,
         return stratified_stats(values, stratum_ids, mask, num_strata,
                                 block_m=block_m, interpret=_interpret())
     return ref.stratified_stats_ref(values, stratum_ids, mask, num_strata)
+
+
+def weighted_histogram(values: jax.Array, stratum_ids: jax.Array,
+                       weights: jax.Array, mask: jax.Array,
+                       edges: jax.Array, num_strata: int,
+                       use_pallas: bool = True, block_m: int = 256):
+    """Fused per-(stratum, bin) weighted histogram — kernel-backed.
+
+    Returns ``(whist [S, B], counts [S, B])``; ``whist`` is the HT-weighted
+    mass per cell, ``counts`` the raw sampled-item tallies that feed the
+    per-bin Eq. 6 indicator variance. ``use_pallas=False`` selects the
+    pure-jnp oracle — what the query layer passes on CPU, where the
+    Pallas interpreter would dominate large jitted programs.
+    """
+    if use_pallas:
+        return weighted_hist(values, stratum_ids, weights, mask, edges,
+                             num_strata, block_m=block_m,
+                             interpret=_interpret())
+    return ref.weighted_hist_ref(values, stratum_ids, weights, mask, edges,
+                                 num_strata)
 
 
 def oasrs_fold(state: OASRSState, stratum_ids: jax.Array,

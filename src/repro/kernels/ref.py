@@ -22,6 +22,27 @@ def stratified_stats_ref(values, stratum_ids, mask, num_strata: int):
     return counts, sums, sumsqs
 
 
+def weighted_hist_ref(values, stratum_ids, weights, mask, edges,
+                      num_strata: int):
+    """Per-(stratum, bin) weighted histogram — oracle for ``weighted_hist``.
+
+    Bin ``b`` is ``[edges[b], edges[b+1])``; the last bin is right-closed.
+    Returns ``(whist [S, B], counts [S, B])`` float32.
+    """
+    num_bins = edges.shape[0] - 1
+    x = values.astype(jnp.float32)[:, None]                  # [M, 1]
+    lo = edges[:num_bins].astype(jnp.float32)[None, :]
+    hi = edges[1:].astype(jnp.float32)[None, :]
+    closed = (jnp.arange(num_bins) == num_bins - 1)[None, :]
+    in_bin = (x >= lo) & jnp.where(closed, x <= hi, x < hi)
+    in_bin = (in_bin & mask[:, None]).astype(jnp.float32)    # [M, B]
+    w = weights.astype(jnp.float32)[:, None]
+    zeros = jnp.zeros((num_strata, num_bins), jnp.float32)
+    whist = zeros.at[stratum_ids].add(in_bin * w)
+    counts = zeros.at[stratum_ids].add(in_bin)
+    return whist, counts
+
+
 def reservoir_fold_ref(stratum_ids, payload, u_accept, u_slot, mask,
                        counts, capacity, values):
     """Item-at-a-time reservoir fold (numpy) — the literal Algorithm 1.

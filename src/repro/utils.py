@@ -36,7 +36,7 @@ def rank_within_stratum(stratum_ids: jax.Array) -> jax.Array:
     idx = jnp.arange(m, dtype=jnp.int32)
     is_start = jnp.concatenate(
         [jnp.ones((1,), jnp.bool_), sorted_ids[1:] != sorted_ids[:-1]])
-    group_start = jnp.maximum.accumulate(jnp.where(is_start, idx, 0))
+    group_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
     rank_sorted = idx - group_start
     # Scatter ranks back to original positions.
     rank = jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)

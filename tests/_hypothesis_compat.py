@@ -1,0 +1,91 @@
+"""`hypothesis` import shim with a vendored deterministic fallback.
+
+Tier-1 must collect and run on containers where `hypothesis` is not
+installed (it is listed in requirements-dev.txt for full-fidelity runs).
+When the real library is present we re-export it untouched; otherwise a
+minimal, deterministic property-test driver stands in:
+
+* ``st.integers/floats/booleans/sampled_from`` — value generators.
+* ``@given(**strategies)`` — runs the test once per example with values
+  drawn from a seeded ``random.Random`` (seed derived from the test name,
+  so runs are reproducible and shrinking is unnecessary for CI purposes).
+* ``@settings(max_examples=N, ...)`` — honored for ``max_examples``; other
+  keyword arguments are accepted and ignored.
+
+The fallback intentionally implements only what this repo's tests use.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                # Read at call time: @settings may wrap @given (or vice
+                # versa) — either order must honor max_examples.
+                max_examples = getattr(runner, "_compat_max_examples",
+                                       _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(fn.__qualname__)
+                for i in range(max_examples):
+                    drawn = {name: s.example(rng)
+                             for name, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise w/ ctx
+                        raise AssertionError(
+                            f"falsifying example (#{i}): {drawn}") from e
+            # Hide the strategy-filled params from pytest's fixture
+            # resolution (only non-strategy params remain injectable).
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in strategies]
+            del runner.__wrapped__
+            runner.__signature__ = sig.replace(parameters=keep)
+            runner._compat_max_examples = getattr(
+                fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+            return runner
+        return deco

@@ -14,3 +14,16 @@ import pytest
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """AbstractMesh across JAX API generations (shared test helper).
+
+    jax <= 0.4.x takes one ``((name, size), ...)`` shape tuple; newer
+    releases take ``(axis_sizes, axis_names)`` positionally.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

@@ -8,15 +8,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.reservoir import reservoir_fold
 from repro.kernels.stratified_stats import stratified_stats
+from repro.kernels.weighted_hist import weighted_hist
 
 
 @pytest.mark.parametrize("m,s,block_m", [
-    (256, 4, 128), (1024, 16, 256), (2048, 64, 1024),
+    (256, 4, 128),
+    pytest.param(1024, 16, 256, marks=pytest.mark.slow),
+    pytest.param(2048, 64, 1024, marks=pytest.mark.slow),
     (1000, 7, 256),          # non-divisible m → padding path
     (128, 1, 128),           # single stratum
 ])
@@ -36,7 +39,8 @@ def test_stats_kernel_sweep(m, s, block_m, dtype):
 
 
 @pytest.mark.parametrize("m,s,n,block_m", [
-    (512, 8, 16, 256), (300, 3, 32, 128), (1024, 16, 8, 512),
+    (512, 8, 16, 256), (300, 3, 32, 128),
+    pytest.param(1024, 16, 8, 512, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
 def test_reservoir_kernel_bit_exact(m, s, n, block_m, dtype):
@@ -86,6 +90,54 @@ def test_reservoir_kernel_incremental_fold():
     np.testing.assert_array_equal(np.asarray(v2), np.asarray(vf))
 
 
+@pytest.mark.parametrize("m,s,b,block_m", [
+    (512, 4, 16, 128),
+    pytest.param(1024, 8, 32, 256, marks=pytest.mark.slow),
+    (1000, 3, 8, 256),           # non-divisible m → padding path
+    (256, 1, 64, 128),           # single stratum, many bins
+])
+def test_weighted_hist_kernel_parity(m, s, b, block_m):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(m + s + b), 4)
+    x = jax.random.normal(k1, (m,)) * 4
+    sid = jax.random.randint(k2, (m,), 0, s)
+    w = jax.random.uniform(k3, (m,)) * 5 + 1
+    mask = jax.random.uniform(k4, (m,)) > 0.25
+    edges = jnp.linspace(-12.0, 12.0, b + 1)
+    got = weighted_hist(x, sid, w, mask, edges, s, block_m=block_m,
+                        interpret=True)
+    want = ref.weighted_hist_ref(x, sid, w, mask, edges, s)
+    for g, wv in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wv),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_weighted_hist_last_bin_right_closed():
+    edges = jnp.linspace(0.0, 1.0, 5)
+    x = jnp.array([0.0, 1.0, 1.0001, -0.0001])
+    got_w, got_c = weighted_hist(
+        x, jnp.zeros((4,), jnp.int32), jnp.ones((4,)),
+        jnp.ones((4,), jnp.bool_), edges, 1, block_m=128, interpret=True)
+    # 0.0 → first bin, 1.0 → last bin (closed), out-of-range → nowhere
+    np.testing.assert_allclose(np.asarray(got_c)[0], [1, 0, 0, 1])
+    assert float(jnp.sum(got_w)) == 2.0
+
+
+def test_weighted_hist_mass_conservation(key):
+    m, s = 2048, 6
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.uniform(k1, (m,)) * 10
+    sid = jax.random.randint(k2, (m,), 0, s)
+    w = jax.random.uniform(k3, (m,)) + 0.5
+    mask = jnp.ones((m,), jnp.bool_)
+    edges = jnp.linspace(0.0, 10.0, 33)
+    whist, cnt = weighted_hist(x, sid, w, mask, edges, s, block_m=256,
+                               interpret=True)
+    np.testing.assert_allclose(float(jnp.sum(whist)), float(jnp.sum(w)),
+                               rtol=1e-4)
+    assert float(jnp.sum(cnt)) == m
+
+
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(m=st.integers(16, 400), s=st.integers(1, 12), seed=st.integers(0, 99))
 def test_stats_kernel_property(m, s, seed):

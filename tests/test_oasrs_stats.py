@@ -1,0 +1,115 @@
+"""OASRS distributional property tests (promised by ``core/oasrs.py``).
+
+Two claims back the whole estimator stack:
+
+1. *Mode equivalence*: ``update_chunk``, ``update_stream`` and
+   ``update_pipelined_chunks`` draw reservoirs from the same distribution
+   — per-item inclusion frequencies agree with the textbook ``N/C``
+   probability (and each other) within binomial tolerance.
+2. *Unbiasedness*: the ``weights()``-corrected SUM/MEAN estimators are
+   unbiased on skewed strata — the mean over many independent ingests
+   matches the true value well inside the CLT band.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import oasrs, query
+
+SPEC = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def _inclusion_freq(fold, m, n, trials, salt):
+    """Per-item inclusion frequency of item j over independent ingests."""
+    sid = jnp.zeros((m,), jnp.int32)
+    x = jnp.arange(m, dtype=jnp.float32)
+
+    @jax.jit
+    def one(key):
+        st = fold(oasrs.init(1, n, SPEC, key), sid, x)
+        hit = jnp.zeros((m,)).at[st.values[0].astype(jnp.int32)].max(
+            st.slot_mask()[0].astype(jnp.float32))
+        return hit
+
+    inc = np.zeros(m)
+    for t in range(trials):
+        inc += np.asarray(one(jax.random.PRNGKey(salt * 10_000 + t)))
+    return inc / trials
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,salt", [
+    ("chunk", 1), ("stream", 2), ("pipelined", 3)])
+def test_inclusion_frequencies_match_vitter(mode, salt):
+    """Every ingestion mode includes item j with probability ~ N/M."""
+    m, n, trials = 64, 8, 250
+    fold = {
+        "chunk": oasrs.update_chunk,
+        "stream": oasrs.update_stream,
+        "pipelined": lambda st, s, x: oasrs.update_pipelined_chunks(
+            st, s, x, lane=16),
+    }[mode]
+    inc = _inclusion_freq(fold, m, n, trials, salt)
+    p = n / m
+    sigma = np.sqrt(p * (1 - p) / trials)
+    assert np.all(np.abs(inc - p) < 5 * sigma + 0.02), \
+        f"{mode}: max dev {np.abs(inc - p).max():.4f} vs p={p}"
+
+
+@pytest.mark.slow
+def test_chunk_vs_stream_vs_pipelined_agree():
+    """The three modes agree with each other within binomial noise."""
+    m, n, trials = 64, 8, 250
+    incs = [
+        _inclusion_freq(oasrs.update_chunk, m, n, trials, 11),
+        _inclusion_freq(oasrs.update_stream, m, n, trials, 12),
+        _inclusion_freq(lambda st, s, x: oasrs.update_pipelined_chunks(
+            st, s, x, lane=16), m, n, trials, 13),
+    ]
+    p = n / m
+    sigma = np.sqrt(p * (1 - p) / trials)
+    for a in range(3):
+        for b in range(a + 1, 3):
+            assert np.abs(incs[a] - incs[b]).max() < 10 * sigma + 0.02
+
+
+def test_weighted_sum_mean_unbiased_on_skewed_strata():
+    """HT-corrected SUM/MEAN are unbiased despite 80/19/1% stratum skew."""
+    m = 4096
+    probs = jnp.array([0.80, 0.19, 0.01])
+    mus = jnp.array([5.0, 50.0, 500.0])
+
+    @jax.jit
+    def one(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        sid = jax.random.choice(k1, 3, (m,), p=probs).astype(jnp.int32)
+        x = mus[sid] + jax.random.normal(k2, (m,))
+        st = oasrs.update_chunk(oasrs.init(3, 64, SPEC, k3), sid, x)
+        return (query.query_sum(st).value, query.query_mean(st).value,
+                jnp.sum(x), jnp.mean(x))
+
+    sums, means, tsums, tmeans = [], [], [], []
+    for t in range(60):
+        s_, m_, ts, tm = one(jax.random.PRNGKey(t))
+        sums.append(float(s_)); means.append(float(m_))
+        tsums.append(float(ts)); tmeans.append(float(tm))
+    rel_sum = abs(np.mean(sums) - np.mean(tsums)) / abs(np.mean(tsums))
+    rel_mean = abs(np.mean(means) - np.mean(tmeans)) / abs(np.mean(tmeans))
+    assert rel_sum < 0.02, f"SUM bias {rel_sum:.4f}"
+    assert rel_mean < 0.02, f"MEAN bias {rel_mean:.4f}"
+
+
+def test_small_stratum_weight_identity():
+    """W_i·Y_i reconstructs C_i exactly for oversampled strata (Eq. 1)."""
+    key = jax.random.PRNGKey(5)
+    sid = jax.random.choice(key, 3, (2048,),
+                            p=jnp.array([0.9, 0.09, 0.01])).astype(jnp.int32)
+    x = jnp.ones((2048,))
+    st = oasrs.update_chunk(oasrs.init(3, 32, SPEC, key), sid, x)
+    w = np.asarray(st.weights())
+    taken = np.asarray(st.taken())
+    counts = np.asarray(st.counts)
+    over = counts > 32
+    np.testing.assert_allclose(w[over] * taken[over], counts[over],
+                               rtol=1e-5)

@@ -48,9 +48,11 @@ def test_master_weights_fp32(key):
 
 
 def test_zero_pspec_folds_dp_axes():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
+
+    from conftest import abstract_mesh
     # abstract mesh: zero_pspec only reads axis sizes
-    mesh = AbstractMesh((4, 2), ("data", "model"))
+    mesh = abstract_mesh((4, 2), ("data", "model"))
     spec = opt.zero_pspec(P(None, "model"), (64, 32), mesh, ("data",))
     assert spec == P("data", "model")
     # non-divisible first dim falls through to the next dim
