@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, param, time_call
 from repro.core import oasrs, query
 from repro.kernels import ops
 
@@ -14,7 +14,7 @@ SPEC = jax.ShapeDtypeStruct((), jnp.float32)
 
 def run() -> list:
     rows = []
-    m, s, n = 65_536, 16, 256
+    m, s, n = param(65_536, 8192), 16, param(256, 64)
     key = jax.random.PRNGKey(0)
     sid = jax.random.randint(key, (m,), 0, s)
     x = jax.random.normal(jax.random.fold_in(key, 1), (m,))
@@ -37,7 +37,7 @@ def run() -> list:
                      f"items_per_sec={m / (us / 1e6):.0f}"))
 
     # Pallas interpret mode — correctness path only on CPU; note derived.
-    small = 4096
+    small = param(4096, 512)
     us = time_call(
         lambda: ops.stratum_moments(x[:small], sid[:small], s,
                                     use_pallas=True),

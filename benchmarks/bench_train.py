@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, param, time_call
 from repro import configs as cfgs
 from repro.models import api
 from repro.models.param import init_params
@@ -25,7 +25,7 @@ def run() -> list:
     window, seq = 32, 64
     toks = jax.random.randint(jax.random.PRNGKey(1), (window, seq), 0,
                               cfg.vocab_size)
-    for frac in (1.0, 0.5, 0.25):
+    for frac in param((1.0, 0.5, 0.25), (1.0, 0.25)):
         b = max(int(window * frac), 2)
         batch = {"tokens": toks[:b],
                  "weights": jnp.full((b,), 1.0 / frac, jnp.float32)}

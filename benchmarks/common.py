@@ -8,10 +8,24 @@ paper's claims and are hardware-independent. Output: CSV rows
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable
 
 import jax
+
+#: Smoke lane: `python -m benchmarks.run --smoke` (or BENCH_SMOKE=1) runs
+#: every benchmark end-to-end at toy sizes so CI catches bit-rot in the
+#: benchmark scripts without paying full-figure runtimes. Absolute numbers
+#: from the smoke lane are meaningless; only "it still runs" is asserted.
+SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
+
+
+def param(full, smoke):
+    """Pick a benchmark size: ``full`` normally, ``smoke`` under the
+    smoke lane. Keep smoke values just big enough to exercise the code
+    path (strata populated, windows slid, kernels launched)."""
+    return smoke if SMOKE else full
 
 
 def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 10,

@@ -6,12 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, param, time_call
 from benchmarks.systems import SPEC, all_systems
 from repro.core import oasrs, query
 from repro.stream import StreamAggregator, TaxiSource
 
-ITEMS = 65_536
+ITEMS = param(65_536, 4096)
 
 
 def run() -> list:

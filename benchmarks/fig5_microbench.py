@@ -6,13 +6,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, param, time_call
 from benchmarks.systems import all_systems, capacity_for_fraction
 from benchmarks.systems import make_oasrs_batched
 from repro.stream import GaussianSource, StreamAggregator, skewed
 
-ITEMS = 65_536
-FRACTIONS = (0.8, 0.6, 0.4, 0.2, 0.1)
+ITEMS = param(65_536, 4096)
+FRACTIONS = param((0.8, 0.6, 0.4, 0.2, 0.1), (0.6, 0.1))
 
 
 def _windows(n, items=ITEMS, seed=0):
@@ -44,7 +44,7 @@ def run() -> list:
                 f"items_per_sec={thr:.0f};acc_loss={np.mean(losses):.5f}"))
 
     # (c): batch interval — fold the same window in chunks of varying size
-    for chunk in (1024, 4096, 16384, 65536):
+    for chunk in param((1024, 4096, 16384, 65536), (512, 4096)):
         cap = capacity_for_fraction(0.6, ITEMS, 3)
         fold = make_oasrs_batched(3, cap)
 

@@ -5,18 +5,18 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, param, time_call
 from benchmarks.systems import all_systems
 from repro.core import error as err
 from repro.stream import GaussianSource, StreamAggregator, skewed
 
-ITEMS = 65_536
+ITEMS = param(65_536, 4096)
 
 
 def run() -> list:
     rows = []
     # (a) vary the arrival share of sub-stream C (heaviest values)
-    for c_share in (0.002, 0.01, 0.05, 0.16):
+    for c_share in param((0.002, 0.01, 0.05, 0.16), (0.01, 0.16)):
         rest = 1.0 - c_share
         agg = StreamAggregator(
             skewed(GaussianSource(), (0.8 * rest, 0.2 * rest, c_share)),
@@ -37,7 +37,7 @@ def run() -> list:
     from repro.core import oasrs, query, window
     SPEC = jnp.zeros(()).dtype
     import jax
-    for k_intervals in (1, 2, 4, 8):
+    for k_intervals in param((1, 2, 4, 8), (1, 4)):
         agg = StreamAggregator(
             skewed(GaussianSource(), (0.6, 0.3, 0.1)), seed=2)
         w = window.init(k_intervals, 3, 2048,

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, param, time_call
 from benchmarks.systems import SPEC, all_systems
 from repro.core import baselines as bl
 from repro.core import distributed as dist
@@ -15,7 +15,7 @@ from repro.core import oasrs, query
 from repro.stream import (GaussianSource, PoissonSource, StreamAggregator,
                           skewed)
 
-ITEMS = 65_536
+ITEMS = param(65_536, 4096)
 
 
 def run() -> list:
@@ -24,7 +24,7 @@ def run() -> list:
     # (a) scalability: vmap-simulated workers, each folding its shard.
     agg = StreamAggregator(skewed(GaussianSource(), (0.6, 0.3, 0.1)),
                            seed=3)
-    for workers in (1, 2, 4, 8):
+    for workers in param((1, 2, 4, 8), (1, 4)):
         per = ITEMS // workers
         shards = agg.sharded_interval(0, workers, per)
         cap = max(int(0.4 * per / 3), 4)

@@ -6,15 +6,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, param
 from benchmarks.systems import SPEC
 from repro.core import baselines as bl
 from repro.core import error as err
 from repro.core import oasrs, query, window
 from repro.stream import GaussianSource, StreamAggregator, skewed
 
-ITEMS = 16_384
-SLIDES = 12
+ITEMS = param(16_384, 2048)
+SLIDES = param(12, 6)
 
 
 def run() -> list:

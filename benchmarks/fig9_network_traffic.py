@@ -5,11 +5,11 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, param, time_call
 from benchmarks.systems import all_systems
 from repro.stream import NetflowSource, StreamAggregator
 
-ITEMS = 65_536
+ITEMS = param(65_536, 4096)
 
 
 def run() -> list:

@@ -20,11 +20,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, param, time_call
 from repro.core import oasrs, quantile as qt
 from repro.stream import NetflowSource, StreamAggregator
 
-ITEMS = 65_536
+ITEMS = param(65_536, 4096)
 QS = jnp.array([0.5, 0.9, 0.99])
 SPEC = jax.ShapeDtypeStruct((), jnp.float32)
 
@@ -50,7 +50,7 @@ def run() -> list:
     us_exact = time_call(exact_q, wins[0].values, warmup=1, iters=5)
     rows.append(emit("fig_q.exact", us_exact, "rel_err=0.0"))
 
-    for cap in (512, 2048):
+    for cap in param((512, 2048), (256,)):
         for method in ("sort", "hist"):
             fn = make_approx(cap, method)
             us = time_call(fn, wins[0].values, wins[0].stratum_ids,

@@ -1,20 +1,34 @@
 """Benchmark harness: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run``  prints CSV rows
-``name,us_per_call,derived`` for every benchmark (paper figures 5-11 +
-kernel/training-plane benches).
+``PYTHONPATH=src python -m benchmarks.run``          — full suite.
+``PYTHONPATH=src python -m benchmarks.run --smoke``  — every benchmark at
+toy sizes (the CI fast-lane smoke job: benchmark scripts can't silently
+rot). Prints CSV rows ``name,us_per_call,derived`` either way.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run every benchmark at toy sizes (CI smoke lane)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark titles")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # Must land in the environment BEFORE benchmark modules import
+        # benchmarks.common (module-level sizes read the flag once).
+        os.environ["BENCH_SMOKE"] = "1"
+
     from benchmarks import (bench_kernels, bench_train, fig5_microbench,
                             fig6_rates_windows, fig7_scale_skew,
                             fig8_means_over_time, fig9_network_traffic,
-                            fig10_taxi, fig_quantiles)
+                            fig10_taxi, fig_quantiles, fig_runtime_modes)
     modules = [
         ("fig5(a-c) microbenchmarks", fig5_microbench),
         ("fig6 arrival rates + windows", fig6_rates_windows),
@@ -23,9 +37,12 @@ def main() -> None:
         ("fig9 network traffic case study", fig9_network_traffic),
         ("fig10 taxi case study", fig10_taxi),
         ("quantile engine accuracy/latency", fig_quantiles),
+        ("runtime modes: batched vs pipelined", fig_runtime_modes),
         ("kernel bench", bench_kernels),
         ("training-plane bench", bench_train),
     ]
+    if args.only:
+        modules = [(t, m) for t, m in modules if args.only in t]
     print("name,us_per_call,derived")
     failures = 0
     for title, mod in modules:

@@ -1,0 +1,25 @@
+"""Streaming runtime: dual-mode executors, standing queries, watermarks,
+backpressure — StreamApprox as a stream *system*, not a benchmark loop.
+
+The two executors mirror the paper's two stream-processing models
+(batched / Spark Streaming vs pipelined / Flink) over one shared jitted
+OASRS core; see ``repro.runtime.executor`` for the architecture notes.
+"""
+from repro.runtime import (controller, executor, records, registry,
+                           watermark)
+from repro.runtime.controller import ControllerConfig, ControllerState
+from repro.runtime.executor import (BatchedExecutor, Emission,
+                                    PipelinedExecutor, RuntimeConfig,
+                                    RuntimeState, init_state)
+from repro.runtime.records import (TimestampedChunk, perturb_event_times,
+                                   stamp, stamp_sharded,
+                                   timestamped_stream)
+from repro.runtime.registry import QueryRegistry, StandingQuery
+
+__all__ = [
+    "controller", "executor", "records", "registry", "watermark",
+    "ControllerConfig", "ControllerState", "BatchedExecutor", "Emission",
+    "PipelinedExecutor", "RuntimeConfig", "RuntimeState", "init_state",
+    "TimestampedChunk", "perturb_event_times", "stamp", "stamp_sharded",
+    "timestamped_stream", "QueryRegistry", "StandingQuery",
+]

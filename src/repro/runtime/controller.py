@@ -1,0 +1,122 @@
+"""Backpressure + adaptive sample-size controller — paper §2.3/§4.2 online.
+
+Closes the loop the paper leaves to a "virtual cost function": at every
+emission the runtime feeds
+
+* the **measured step latency** (host wall time of the last
+  ingest+query step, EMA-smoothed on device), and
+* the **realized error half-width** of a designated accuracy query
+  (Eq. 5–9 widths for linear queries, bootstrap widths for nonlinear)
+
+into one pure-``jnp`` update that retunes the per-stratum reservoir
+capacity, composing two signals:
+
+1. **Accuracy feedback** — :func:`repro.core.adaptive.next_capacity`
+   (Neyman allocation + §4.2 violation feedback) proposes capacities
+   meeting the half-width target from the last window's observed
+   ``(C_i, s_i²)``.
+2. **Backpressure** — if the latency EMA exceeds the latency budget the
+   proposal is scaled down by the pressure ratio (variance ∝ 1/N, cost ∝
+   N: shedding sample size is the knob that trades accuracy for
+   timeliness), never below ``min_per_stratum``.
+
+The batched executor additionally quantizes a **micro-batch size** knob
+(power-of-two number of chunks per window step) from the same pressure
+signal — the Spark-Streaming "adapt the batch interval" move — kept
+host-side because it changes trace shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adaptive
+from repro.core import error as err
+from repro.utils import dataclass_pytree
+
+
+@dataclass_pytree
+@dataclasses.dataclass
+class ControllerState:
+    """Device-resident controller state (part of the runtime pytree)."""
+    capacity: jax.Array       # [S] i32 — per-stratum capacity, new intervals
+    base_capacity: jax.Array  # [S] i32 — configured capacity (backpressure
+    #                           reference: shedding is re-derived from this
+    #                           every emission, so it recovers by itself)
+    latency_ema: jax.Array    # () f32 — smoothed step latency (seconds)
+    pressure: jax.Array       # () f32 — latency_ema / latency_budget
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Static controller targets (None disables that feedback path)."""
+    budget: Optional[adaptive.BudgetConfig] = None   # accuracy target
+    latency_budget_s: Optional[float] = None         # per-step budget
+    ema: float = 0.5                                 # latency EMA weight
+    min_per_stratum: int = 8
+
+
+def init(capacity: jax.Array) -> ControllerState:
+    cap = jnp.asarray(capacity, jnp.int32)
+    return ControllerState(capacity=cap, base_capacity=cap,
+                           latency_ema=jnp.zeros((), jnp.float32),
+                           pressure=jnp.zeros((), jnp.float32))
+
+
+def update(ctrl: ControllerState, cfg: ControllerConfig,
+           stats: err.StratumStats, realized: err.Estimate,
+           latency_s: jax.Array, intervals: int = 1) -> ControllerState:
+    """One feedback step at an emission boundary (pure, jittable).
+
+    ``stats`` are PER-STRATUM ``[S]`` statistics (window cells pooled per
+    stratum — the executors do this); ``realized`` is the window query's
+    Estimate; ``latency_s`` the measured wall time of the step that
+    produced it. ``intervals`` converts the window-level Neyman
+    allocation into the per-interval capacity new intervals adopt.
+    """
+    lat = jnp.asarray(latency_s, jnp.float32)
+    ema = jnp.where(ctrl.latency_ema > 0.0,
+                    cfg.ema * lat + (1.0 - cfg.ema) * ctrl.latency_ema,
+                    lat)
+
+    # The proposal is re-derived from scratch every emission (Neyman
+    # allocation under an accuracy budget, else the configured baseline),
+    # so backpressure shedding is never a ratchet: once the latency EMA
+    # recovers, the next proposal is back at full size.
+    if cfg.budget is not None:
+        alloc = adaptive.next_capacity(cfg.budget, stats, realized)
+        cap = -(-alloc // jnp.int32(max(intervals, 1)))   # ceil divide
+    else:
+        cap = ctrl.base_capacity
+
+    if cfg.latency_budget_s is not None:
+        pressure = ema / jnp.float32(cfg.latency_budget_s)
+        relief = jnp.clip(1.0 / jnp.maximum(pressure, 1.0), 0.125, 1.0)
+        cap = jnp.ceil(cap.astype(jnp.float32) * relief).astype(jnp.int32)
+    else:
+        pressure = jnp.zeros((), jnp.float32)
+
+    cap = jnp.maximum(cap, jnp.int32(cfg.min_per_stratum))
+    if cfg.budget is not None:
+        cap = jnp.minimum(cap, cfg.budget.max_per_stratum)
+    return ControllerState(capacity=cap, base_capacity=ctrl.base_capacity,
+                           latency_ema=ema, pressure=pressure)
+
+
+def next_batch_chunks(batch_chunks: int, pressure: float,
+                      max_batch_chunks: int) -> int:
+    """Host-side micro-batch sizing from the pressure signal (batched mode).
+
+    Sustained pressure > 1 doubles the micro-batch (amortizing per-step
+    overhead raises throughput at the cost of emission latency); pressure
+    < 1/2 halves it back. Power-of-two quantization bounds retracing of
+    the scanned window step to ``log2(max_batch_chunks)`` shapes.
+    """
+    if pressure > 1.0 and batch_chunks < max_batch_chunks:
+        return min(batch_chunks * 2, max_batch_chunks)
+    if pressure < 0.5 and batch_chunks > 1:
+        return batch_chunks // 2
+    return batch_chunks

@@ -1,0 +1,500 @@
+"""Dual-mode streaming runtime: batched + pipelined executors.
+
+The paper's claim is that OASRS is generic across the two prominent
+stream-system types; this module *executes* that claim. Both executors
+share ONE jitted ingest core (`_ingest_chunk` — watermark routing +
+per-interval OASRS folds + ring maintenance), so their sampling
+trajectories are identical chunk-for-chunk and registered-query answers
+agree exactly at window boundaries (property-tested). They differ only
+in *when* the core runs and *where* the host synchronizes:
+
+* :class:`BatchedExecutor` — micro-batch model (Spark Streaming): chunks
+  accumulate host-side; every ``batch_chunks`` arrivals ONE jitted window
+  step scans the core over the micro-batch, evaluates every standing
+  query from the shared sample pass, and applies the controller. The host
+  barrier per window is inherent to the model (the driver heartbeat).
+* :class:`PipelinedExecutor` — pipelined model (Flink): every chunk flows
+  through the jitted core as it arrives — no window barrier, no host
+  sync in the hot path (asserted by trace count in tests). Emissions
+  (query evaluation + controller + the only host sync) fire every
+  ``emit_every`` chunks.
+
+Sharding (``num_shards > 1``) vmaps the core over per-shard states — the
+in-process analog of ``shard_map`` used throughout this repo's tests —
+with the ingest path built on :func:`repro.core.distributed.local_update`
+(zero collectives, asserted against the jaxpr) and emissions merging the
+per-(shard × interval × stratum) cells exactly like the Eq. 5 single-psum
+merge in ``core/distributed.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed as dist
+from repro.core import error as err
+from repro.core import oasrs
+from repro.core import quantile as qt
+from repro.core import window as win
+from repro.runtime import controller as ctl
+from repro.runtime import watermark as wmk
+from repro.runtime.records import TimestampedChunk
+from repro.runtime.registry import QueryRegistry, Result
+from repro.utils import dataclass_pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Static description of one runtime instance (hashable, jit-safe)."""
+    num_strata: int
+    capacity: int                      # per-stratum reservoir capacity N_i
+    num_intervals: int = 4             # ring size K (window = K intervals)
+    interval_span: float = 1.0         # event-time units per interval
+    allowed_lateness: float = 0.5      # watermark lag (event-time units)
+    max_capacity: Optional[int] = None  # reservoir allocation N_max
+    num_shards: int = 1                # >1: vmap-sharded local states
+    controller: ctl.ControllerConfig = ctl.ControllerConfig()
+    accuracy_query: Optional[str] = None  # registry name driving feedback
+    batch_chunks: int = 4              # batched mode: chunks per window step
+    max_batch_chunks: int = 32
+    emit_every: int = 4                # pipelined mode: chunks per emission
+
+
+@dataclass_pytree
+@dataclasses.dataclass
+class RuntimeState:
+    """Device-resident runtime state (stacked on a [W] axis when sharded)."""
+    window: win.WindowState       # ring of K per-interval OASRS states
+    slot_interval: jax.Array      # [K] i32 — event interval held per slot
+    open_interval: jax.Array      # () i32 — newest interval seen
+    wm: wmk.WatermarkState
+    ctrl: ctl.ControllerState
+
+
+@dataclasses.dataclass
+class Emission:
+    """One emission: query answers + watermark accounting + rates."""
+    index: int
+    results: Dict[str, Result]
+    watermark: float
+    open_interval: int
+    on_time: int
+    late: int
+    dropped: int
+    capacity: jax.Array           # [S] i32 controller capacity after update
+    latency_s: float              # measured step latency fed back
+    items: int                    # items pushed since previous emission
+
+
+def init_state(cfg: RuntimeConfig, key: jax.Array) -> RuntimeState:
+    """Fresh runtime state (per-shard states stacked when sharded)."""
+    k = cfg.num_intervals
+    cap = jnp.full((cfg.num_strata,), cfg.capacity, jnp.int32)
+    if cfg.num_shards > 1:
+        # Paper §3.2: each of w workers holds reservoirs of size N_i / w.
+        cap = dist.split_capacity(cap, cfg.num_shards)
+    max_cap = cfg.max_capacity
+    if max_cap is None:
+        max_cap = int(cap.max())
+        if cfg.controller.budget is not None:
+            # The accuracy feedback may raise per-interval capacity up to
+            # the budget's per-stratum ceiling; N_max must cover it or
+            # reservoir writes would spill into neighboring strata
+            # (capacity <= N_max is an OASRSState invariant).
+            max_cap = max(max_cap,
+                          int(cfg.controller.budget.max_per_stratum))
+    spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def one(shard_key):
+        slots = jnp.arange(k, dtype=jnp.int32)
+        return RuntimeState(
+            window=win.init(k, cfg.num_strata, cap, spec, shard_key,
+                            max_capacity=max_cap),
+            slot_interval=-jnp.mod(-slots, k),   # intervals 1-K … 0
+            open_interval=jnp.zeros((), jnp.int32),
+            wm=wmk.init(),
+            ctrl=ctl.init(cap),
+        )
+
+    if cfg.num_shards == 1:
+        return one(key)
+    return jax.vmap(one)(jax.random.split(key, cfg.num_shards))
+
+
+# ---------------------------------------------------------------------------
+# The shared jitted core.
+# ---------------------------------------------------------------------------
+
+def _ingest_chunk(cfg: RuntimeConfig, state: RuntimeState,
+                  chunk: TimestampedChunk) -> RuntimeState:
+    """Fold one chunk: watermark-route items, maintain the interval ring,
+    update per-interval reservoirs. Pure jnp — no collectives, no host.
+    """
+    k = cfg.num_intervals
+    r = wmk.route_chunk(state.wm, state.open_interval, chunk.times,
+                        chunk.mask, cfg.interval_span, cfg.allowed_lateness,
+                        k)
+    # Ring maintenance without an explicit slide loop: interval j lives in
+    # slot j mod K, so each slot's *desired* occupant is the newest live
+    # interval congruent to it. A slot whose occupant changed is reset
+    # (counts zeroed — reservoir contents die via slot_mask) and adopts
+    # the controller's current capacity; live slots keep theirs so the
+    # Vitter acceptance invariant holds within an interval.
+    slots = jnp.arange(k, dtype=jnp.int32)
+    desired = r.open_interval - jnp.mod(r.open_interval - slots, k)
+    reset = desired != state.slot_interval
+    iv = state.window.intervals
+    # Adopted capacity is hard-clamped to the reservoir allocation: a
+    # controller proposal above N_max would index out of the slot buffer.
+    n_max = jax.tree_util.tree_leaves(iv.values)[0].shape[2]  # [K,S,N,…]
+    adopt = jnp.minimum(state.ctrl.capacity, jnp.int32(n_max))
+    iv = dataclasses.replace(
+        iv,
+        counts=jnp.where(reset[:, None], 0, iv.counts),
+        capacity=jnp.where(reset[:, None], adopt[None, :], iv.capacity))
+
+    # Route accepted items to the slot owning their event interval, then
+    # fold every slot's masked view of the chunk (collective-free local
+    # update — the distributed ingest contract).
+    slot_masks = r.accept[None, :] & (
+        r.target_interval[None, :] == desired[:, None])          # [K, M]
+    iv = jax.vmap(dist.local_update, in_axes=(0, None, None, 0))(
+        iv, chunk.stratum_ids, chunk.values, slot_masks)
+
+    window = win.WindowState(
+        intervals=iv,
+        cursor=jnp.mod(r.open_interval + 1, k),
+        filled=jnp.minimum(r.open_interval + 1, k))
+    return RuntimeState(window=window, slot_interval=desired,
+                        open_interval=r.open_interval, wm=r.wm,
+                        ctrl=state.ctrl)
+
+
+def _merged_view(cfg: RuntimeConfig, state: RuntimeState):
+    """Shared sample pass: merged SampleView + StratumStats.
+
+    Single shard: the window's (interval × stratum) cells. Sharded: the
+    (shard × interval × stratum) cells — the same Eq. 5 concatenation the
+    single-psum merges in ``core/distributed.py`` compute collectively.
+    """
+    if cfg.num_shards == 1:
+        view = win.sample_view(state.window)
+    else:
+        views = jax.vmap(win.sample_view)(state.window)
+        n = views.values.shape[-1]
+        view = qt.SampleView(values=views.values.reshape(-1, n),
+                             counts=views.counts.reshape(-1),
+                             taken=views.taken.reshape(-1))
+    stats = err.stratum_stats_from_sample(
+        view.values, view.counts, view.taken, view.slot_mask())
+    return view, stats
+
+
+def _emission_key(cfg: RuntimeConfig, state: RuntimeState) -> jax.Array:
+    keys = state.window.intervals.key    # [K, 2] (or [W, K, 2] sharded)
+    return jax.random.fold_in(keys.reshape(-1, keys.shape[-1])[0], 0xE717)
+
+
+def _evaluate(cfg: RuntimeConfig, registry: QueryRegistry,
+              state: RuntimeState):
+    view, stats = _merged_view(cfg, state)
+    results = registry.evaluate_view(view, stats,
+                                     _emission_key(cfg, state))
+    return results, stats
+
+
+def _apply_controller(cfg: RuntimeConfig, state: RuntimeState,
+                      results, stats, latency_s) -> RuntimeState:
+    realized = (results[cfg.accuracy_query] if cfg.accuracy_query
+                else err.estimate_mean(stats))
+    k = cfg.num_intervals
+    if cfg.num_shards > 1:
+        # Per-shard controllers see their local stats but share the global
+        # realized width and the (replicated) latency signal.
+        def per_shard(c, s):
+            return ctl.update(c, cfg.controller, s, realized, latency_s,
+                              intervals=k)
+        ctrl = jax.vmap(per_shard)(state.ctrl, _pooled_stats(cfg, stats))
+        return dataclasses.replace(state, ctrl=ctrl)
+    ctrl = ctl.update(state.ctrl, cfg.controller, _pooled_stats(cfg, stats),
+                      realized, latency_s, intervals=k)
+    return dataclasses.replace(state, ctrl=ctrl)
+
+
+def _pooled_stats(cfg: RuntimeConfig, stats: err.StratumStats):
+    """Pool the merged (shard ×) interval × stratum cells per stratum.
+
+    The controller's Neyman allocation is per *stratum* (capacity is a
+    ``[S]`` knob); the emission's shared stats are per cell. Moments sum
+    across a stratum's interval cells. Sharded: ``[W·K·S] → [W, S]`` so
+    each shard's controller sees its local window.
+    """
+    k, s = cfg.num_intervals, cfg.num_strata
+
+    def pool(leaf):
+        if cfg.num_shards > 1:
+            return leaf.reshape(cfg.num_shards, k, s).sum(axis=1)
+        return leaf.reshape(k, s).sum(axis=0)
+
+    return err.StratumStats(
+        counts=pool(stats.counts), taken=pool(stats.taken),
+        sums=pool(stats.sums), sumsqs=pool(stats.sumsqs))
+
+
+def _stack(chunks: List[TimestampedChunk]) -> TimestampedChunk:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *chunks)
+
+
+# ---------------------------------------------------------------------------
+# Executors.
+# ---------------------------------------------------------------------------
+
+class _ExecutorBase:
+    """Shared plumbing: state, emission bookkeeping, ad-hoc queries."""
+
+    mode = "base"
+
+    def __init__(self, cfg: RuntimeConfig, registry: QueryRegistry,
+                 key: jax.Array):
+        if len(registry) == 0:
+            raise ValueError("register at least one standing query")
+        if cfg.accuracy_query is not None:
+            match = [q for q in registry.queries
+                     if q.name == cfg.accuracy_query]
+            if not match:
+                raise ValueError(
+                    f"accuracy_query {cfg.accuracy_query!r} is not "
+                    "registered")
+            if match[0].kind not in ("sum", "mean", "count"):
+                raise ValueError(
+                    f"accuracy_query {cfg.accuracy_query!r} has kind "
+                    f"{match[0].kind!r}; the controller's feedback needs "
+                    "a scalar linear estimate (sum/mean/count)")
+        self.cfg = cfg
+        self.registry = registry
+        registry.freeze()     # traced steps close over the query list
+        self.state = init_state(cfg, key)
+        self.emissions: List[Emission] = []
+        self._items_since_emit = 0
+        self._last_latency = 0.0
+        self._query_fn = jax.jit(
+            lambda st: _evaluate(cfg, registry, st)[0])
+
+    def query(self) -> Dict[str, Result]:
+        """Evaluate every standing query on the current state (ad hoc —
+        no controller feedback, no emission record)."""
+        return self._query_fn(self.state)
+
+    def reset(self, key: jax.Array) -> None:
+        """Restart on a fresh stream, KEEPING compiled steps.
+
+        Benchmarks warm an executor on a stream prefix, reset, then time
+        the real run — the jitted steps are instance closures, so timing
+        a second instance would re-pay trace+compile inside the timed
+        region.
+        """
+        self.state = init_state(self.cfg, key)
+        self.emissions = []
+        self._items_since_emit = 0
+        self._last_latency = 0.0
+
+    def run(self, chunks: Iterable[TimestampedChunk]) -> List[Emission]:
+        for c in chunks:
+            self.push(c)
+        return self.finalize()
+
+    def push(self, chunk: TimestampedChunk) -> None:
+        raise NotImplementedError
+
+    def finalize(self) -> List[Emission]:
+        raise NotImplementedError
+
+    def _wm_totals(self, state: RuntimeState):
+        wm = state.wm
+        if self.cfg.num_shards > 1:
+            return (float(jnp.min(wmk.watermark(
+                        wm, self.cfg.allowed_lateness))),
+                    int(jnp.max(state.open_interval)),
+                    int(jnp.sum(wm.on_time)), int(jnp.sum(wm.late)),
+                    int(jnp.sum(wm.dropped)))
+        return (float(wmk.watermark(wm, self.cfg.allowed_lateness)),
+                int(state.open_interval), int(wm.on_time),
+                int(wm.late), int(wm.dropped))
+
+    def _record(self, results, latency_s: float) -> Emission:
+        wmark, open_iv, on_time, late, dropped = self._wm_totals(self.state)
+        cap = self.state.ctrl.capacity
+        if self.cfg.num_shards > 1:
+            cap = jnp.sum(cap, axis=0)     # global capacity = Σ shard caps
+        em = Emission(index=len(self.emissions), results=results,
+                      watermark=wmark, open_interval=open_iv,
+                      on_time=on_time, late=late, dropped=dropped,
+                      capacity=cap, latency_s=latency_s,
+                      items=self._items_since_emit)
+        self.emissions.append(em)
+        self._items_since_emit = 0
+        return em
+
+
+class BatchedExecutor(_ExecutorBase):
+    """Micro-batch executor (Spark Streaming analog).
+
+    ONE jitted step per window: scan the shared core over the accumulated
+    micro-batch, evaluate the registry from the shared sample pass, apply
+    the controller (fed the *previous* step's measured latency — one-step
+    -delayed feedback keeps the step pure). The controller's pressure
+    signal resizes the micro-batch host-side between windows, quantized
+    to powers of two so retracing stays bounded.
+    """
+
+    mode = "batched"
+
+    def __init__(self, cfg: RuntimeConfig, registry: QueryRegistry,
+                 key: jax.Array):
+        super().__init__(cfg, registry, key)
+        self.batch_chunks = cfg.batch_chunks
+        self._pending: List[TimestampedChunk] = []
+        self._step_cache: dict = {}
+
+    def reset(self, key: jax.Array) -> None:
+        super().reset(key)
+        self.batch_chunks = self.cfg.batch_chunks
+        self._pending = []
+
+    def _window_step(self, num_chunks: int, state, stacked, latency_prev):
+        """AOT-compiled window step per micro-batch size.
+
+        Compilation happens HERE, outside the timed region of ``_flush``
+        — otherwise every pressure-triggered batch resize would measure
+        trace+compile of the new scan shape as step latency, re-spiking
+        the pressure signal and cascading resizes to the maximum.
+        """
+        fn = self._step_cache.get(num_chunks)
+        if fn is None:
+            cfg, registry = self.cfg, self.registry
+            ingest = _ingest_chunk
+            if cfg.num_shards > 1:
+                ingest = jax.vmap(_ingest_chunk, in_axes=(None, 0, 0))
+
+            def step(state, stacked, latency_prev):
+                def body(st, ch):
+                    return ingest(cfg, st, ch), None
+                state, _ = jax.lax.scan(body, state, stacked)
+                results, stats = _evaluate(cfg, registry, state)
+                state = _apply_controller(cfg, state, results, stats,
+                                          latency_prev)
+                return state, results
+
+            fn = jax.jit(step).lower(state, stacked, latency_prev).compile()
+            self._step_cache[num_chunks] = fn
+        return fn
+
+    def push(self, chunk: TimestampedChunk) -> None:
+        self._pending.append(chunk)
+        self._items_since_emit += int(chunk.values.size)
+        if len(self._pending) >= self.batch_chunks:
+            self._flush()
+
+    def _flush(self) -> None:
+        if not self._pending:
+            return
+        stacked = _stack(self._pending)
+        n = len(self._pending)
+        self._pending = []
+        lat = jnp.float32(self._last_latency)
+        fn = self._window_step(n, self.state, stacked, lat)
+        t0 = time.perf_counter()
+        self.state, results = fn(self.state, stacked, lat)
+        jax.block_until_ready(results)    # the micro-batch barrier
+        self._last_latency = time.perf_counter() - t0
+        self._record(results, self._last_latency)
+        if self.cfg.controller.latency_budget_s is not None:
+            self.batch_chunks = ctl.next_batch_chunks(
+                self.batch_chunks,
+                float(jnp.max(self.state.ctrl.pressure)),
+                self.cfg.max_batch_chunks)
+
+    def finalize(self) -> List[Emission]:
+        self._flush()
+        return self.emissions
+
+
+class PipelinedExecutor(_ExecutorBase):
+    """Pipelined executor (Flink analog).
+
+    Every chunk flows through the jitted core on arrival — incremental
+    reservoir + watermark updates with NO window barrier and NO host sync
+    in the hot loop (``push`` only dispatches; ``trace_count`` stays 1
+    regardless of how many chunks flow, asserted in tests). Standing
+    queries are answered continuously: every ``emit_every`` chunks an
+    emission evaluates the registry and feeds the controller the measured
+    per-chunk latency since the previous emission.
+    """
+
+    mode = "pipelined"
+
+    def __init__(self, cfg: RuntimeConfig, registry: QueryRegistry,
+                 key: jax.Array):
+        super().__init__(cfg, registry, key)
+        self.trace_count = 0
+        ingest = _ingest_chunk
+        if cfg.num_shards > 1:
+            ingest = jax.vmap(_ingest_chunk, in_axes=(None, 0, 0))
+
+        def core(state, chunk):
+            self.trace_count += 1          # increments at TRACE time only
+            return ingest(cfg, state, chunk)
+
+        self._step = jax.jit(core)
+
+        def emit(state, latency_s):
+            results, stats = _evaluate(cfg, registry, state)
+            state = _apply_controller(cfg, state, results, stats,
+                                      latency_s)
+            return state, results
+
+        self._emit = jax.jit(emit)
+        self._chunks_since_emit = 0
+        self._emit_t0 = time.perf_counter()
+
+    def reset(self, key: jax.Array) -> None:
+        super().reset(key)
+        self._chunks_since_emit = 0
+        self._emit_t0 = time.perf_counter()
+
+    def push(self, chunk: TimestampedChunk) -> None:
+        if self._chunks_since_emit == 0:
+            # The emission period's latency clock starts at its FIRST
+            # arrival — idle wall time between periods (or before the
+            # first chunk ever) must not read as processing latency.
+            self._emit_t0 = time.perf_counter()
+        self.state = self._step(self.state, chunk)     # async dispatch
+        self._items_since_emit += int(chunk.values.size)
+        self._chunks_since_emit += 1
+        if self._chunks_since_emit >= self.cfg.emit_every:
+            self._emit_now()
+
+    def _emit_now(self) -> None:
+        # Emission boundary — the ONLY place the pipeline touches host.
+        jax.block_until_ready(self.state)
+        elapsed = time.perf_counter() - self._emit_t0
+        per_chunk = elapsed / max(self._chunks_since_emit, 1)
+        self._last_latency = per_chunk
+        self.state, results = self._emit(self.state,
+                                         jnp.float32(per_chunk))
+        jax.block_until_ready(results)
+        self._record(results, per_chunk)
+        self._chunks_since_emit = 0
+        self._emit_t0 = time.perf_counter()
+
+    def finalize(self) -> List[Emission]:
+        if self._chunks_since_emit:
+            self._emit_now()
+        return self.emissions
+
+
+Executor = Union[BatchedExecutor, PipelinedExecutor]

@@ -1,0 +1,146 @@
+"""Standing-query registry: many queries, ONE shared sample pass.
+
+A stream processor serves *standing* queries: registered once, answered
+at every emission. Evaluating each query independently would re-project
+the window's reservoir ring once per query (the dominant cost — the ring
+is ``K·S·N_max`` slots). The registry instead materializes the merged
+:class:`~repro.core.quantile.SampleView` and the fused
+:class:`~repro.core.error.StratumStats` **once per emission** and lets
+every registered query read from that shared pass:
+
+* linear queries (``sum``/``mean``/``count``) consume the shared stats
+  (Eqs. 5–9 closed-form bounds);
+* ``histogram`` / ``quantile`` / ``heavy_hitters`` / ``distinct`` consume
+  the shared view (Eq. 6 per bin / bootstrap bounds, per the README
+  query table).
+
+``evaluate`` is pure ``jnp`` end-to-end, so both executors jit it as part
+of their emission step, and its results are pytrees (``Estimate`` /
+``HeavyHitters``) keyed by query name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import error as err
+from repro.core import quantile as qt
+from repro.core import sketches as sk
+from repro.core import window as win
+from repro.utils import fold_in_str
+
+KINDS = ("sum", "mean", "count", "histogram", "quantile",
+         "heavy_hitters", "distinct")
+
+Result = Union[err.Estimate, sk.HeavyHitters]
+
+
+@dataclasses.dataclass(frozen=True)
+class StandingQuery:
+    """One registered query (static spec — hashable, closed over by jit)."""
+    name: str
+    kind: str
+    predicate: Optional[Callable[[jax.Array], jax.Array]] = None  # count
+    edges: Optional[tuple] = None          # histogram bin edges
+    qs: Optional[tuple] = None             # quantile levels
+    k: int = 8                             # heavy hitters
+    num_replicates: int = 32               # bootstrap replicates
+    method: str = "sort"                   # quantile estimator
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown query kind {self.kind!r}; "
+                             f"one of {KINDS}")
+        if self.kind == "count" and self.predicate is None:
+            raise ValueError("count query needs predicate=")
+        if self.kind == "histogram" and self.edges is None:
+            raise ValueError("histogram query needs edges=")
+        if self.kind == "quantile" and self.qs is None:
+            raise ValueError("quantile query needs qs=")
+
+
+class QueryRegistry:
+    """Ordered collection of standing queries over one value stream."""
+
+    def __init__(self, queries: Sequence[StandingQuery] = ()):
+        self._queries: list[StandingQuery] = list(queries)
+        self._frozen = False
+        names = [q.name for q in self._queries]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate query names in {names}")
+
+    def register(self, name: str, kind: str, **kw) -> "QueryRegistry":
+        """Add a query (chainable). Must happen before an executor is
+        built on this registry — executors close over the query list when
+        tracing their steps, so a later register() would make emission
+        result sets silently inconsistent. Executors freeze the registry
+        at construction; register() after that raises."""
+        if self._frozen:
+            raise ValueError(
+                "registry is frozen (an executor traced it); register "
+                "every standing query before constructing executors")
+        if any(q.name == name for q in self._queries):
+            raise ValueError(f"query {name!r} already registered")
+        self._queries.append(StandingQuery(name=name, kind=kind, **kw))
+        return self
+
+    def freeze(self) -> None:
+        """Disallow further register() calls (executors call this)."""
+        self._frozen = True
+
+    @property
+    def queries(self) -> tuple:
+        return tuple(self._queries)
+
+    def __len__(self) -> int:
+        return len(self._queries)
+
+    def evaluate(self, window: win.WindowState,
+                 key: jax.Array) -> Dict[str, Result]:
+        """Answer every registered query from one shared sample pass.
+
+        ``key`` seeds the bootstrap paths (folded per query name so
+        adding a query never perturbs another's replicates).
+        """
+        view = win.sample_view(window)                    # THE shared pass
+        stats = err.stratum_stats_from_sample(
+            view.values, view.counts, view.taken, view.slot_mask())
+        return self.evaluate_view(view, stats, key)
+
+    def evaluate_view(self, view: qt.SampleView, stats: err.StratumStats,
+                      key: jax.Array) -> Dict[str, Result]:
+        """Answer every query from an already-materialized shared pass.
+
+        The executors call this directly: single-shard emissions pass the
+        window's merged view; sharded emissions pass the (shard ×
+        interval × stratum) concatenation (the Eq. 5 merge).
+        """
+        out: Dict[str, Result] = {}
+        for q in self._queries:
+            if q.kind == "sum":
+                out[q.name] = err.estimate_sum(stats)
+            elif q.kind == "mean":
+                out[q.name] = err.estimate_mean(stats)
+            elif q.kind == "count":
+                ind = q.predicate(view.values).astype(jnp.float32)
+                out[q.name] = err.estimate_sum(
+                    err.stratum_stats_from_sample(
+                        ind, view.counts, view.taken, view.slot_mask()))
+            elif q.kind == "histogram":
+                out[q.name] = qt.cell_counts(
+                    view, jnp.asarray(q.edges, jnp.float32))
+            elif q.kind == "quantile":
+                out[q.name] = qt.query_quantile(
+                    view, jnp.asarray(q.qs, jnp.float32), method=q.method,
+                    num_replicates=q.num_replicates,
+                    key=fold_in_str(key, q.name))
+            elif q.kind == "heavy_hitters":
+                out[q.name] = sk.query_heavy_hitters(view, q.k)
+            elif q.kind == "distinct":
+                out[q.name] = sk.query_distinct(
+                    view, num_replicates=q.num_replicates,
+                    key=fold_in_str(key, q.name))
+        return out

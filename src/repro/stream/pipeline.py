@@ -71,16 +71,26 @@ class Prefetcher:
         self._depth = depth
         self._buf: collections.deque = collections.deque()
         self._lock = threading.Lock()
+        self._error: Optional[BaseException] = None
         self._fill()
 
     def _fill(self):
         while len(self._buf) < self._depth:
             e = self._epoch
-            self._epoch += 1
-            self._buf.append((e, self._fetch(e)))
+            item = self._fetch(e)    # may raise — cursor not yet advanced,
+            self._epoch = e + 1      # so a retry re-fetches the same epoch
+            self._buf.append((e, item))
 
     def next(self):
         with self._lock:
+            if self._error is not None:
+                # A background fill died: surface its exception to the
+                # consumer instead of silently stalling the pipeline. The
+                # error slot is cleared and the epoch cursor was never
+                # advanced past the failed fetch, so a transient failure
+                # can be retried by calling next() again.
+                exc, self._error = self._error, None
+                raise exc
             if not self._buf:        # consumer outpaced the fill thread
                 self._fill()
             epoch, item = self._buf.popleft()
@@ -91,7 +101,10 @@ class Prefetcher:
 
     def _fill_one(self):
         with self._lock:
-            self._fill()
+            try:
+                self._fill()
+            except BaseException as exc:     # noqa: BLE001 — must not die
+                self._error = exc            # silently in a daemon thread
 
     @property
     def cursor(self) -> int:

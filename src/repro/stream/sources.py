@@ -129,5 +129,23 @@ class TaxiSource(Source):
 
 
 def skewed(source: Source, mix: Sequence[float]) -> Source:
-    """Re-mix a source's arrival rates (§5.4 varying rates, §5.7 skew)."""
-    return dataclasses.replace(source, mix=tuple(mix))
+    """Re-mix a source's arrival rates (§5.4 varying rates, §5.7 skew).
+
+    ``mix`` is validated and normalized to sum to 1: it must have one
+    nonnegative, finite entry per stratum with positive total mass.
+    (``jax.random.choice`` would otherwise renormalize silently — or
+    sample garbage for negative weights.)
+    """
+    mix = tuple(float(m) for m in mix)
+    if len(mix) != source.num_strata:
+        raise ValueError(
+            f"mix has {len(mix)} entries for {source.num_strata} strata")
+    if any(m != m or m in (float("inf"), float("-inf")) for m in mix):
+        raise ValueError(f"mix entries must be finite, got {mix}")
+    if any(m < 0.0 for m in mix):
+        raise ValueError(f"mix entries must be nonnegative, got {mix}")
+    total = sum(mix)
+    if total <= 0.0:
+        raise ValueError(f"mix must have positive total mass, got {mix}")
+    return dataclasses.replace(
+        source, mix=tuple(m / total for m in mix))

@@ -1,0 +1,179 @@
+"""Mode equivalence: batched and pipelined executors share one jitted
+core, so the same source + same keys must yield IDENTICAL standing-query
+answers at window boundaries — the runtime-level restatement of the
+paper's 'OASRS is generic across both stream-system types' claim.
+
+Fast lane: exact-equality equivalence on an in-order stream.
+Slow lane: a soak run with bounded out-of-order arrivals, checking both
+equivalence under disorder and exact watermark accounting against an
+independent numpy oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (BatchedExecutor, PipelinedExecutor,
+                           QueryRegistry, RuntimeConfig,
+                           perturb_event_times, timestamped_stream)
+from repro.stream import GaussianSource, StreamAggregator
+
+
+def _registry():
+    return (QueryRegistry()
+            .register("total", "sum")
+            .register("avg", "mean")
+            .register("big", "count", predicate=lambda x: x > 500.0)
+            .register("hist", "histogram",
+                      edges=(0.0, 30.0, 1100.0, 2e4))
+            .register("p", "quantile", qs=(0.5, 0.9), num_replicates=8)
+            .register("top", "heavy_hitters", k=4)
+            .register("nuniq", "distinct", num_replicates=8))
+
+
+def _cfg(**kw):
+    base = dict(num_strata=3, capacity=128, num_intervals=4,
+                interval_span=1.0, allowed_lateness=0.5,
+                batch_chunks=4, emit_every=4)
+    base.update(kw)
+    return RuntimeConfig(**base)
+
+
+def _assert_results_equal(ra, rb):
+    for name in ra:
+        a, b = ra[name], rb[name]
+        if hasattr(a, "keys"):           # HeavyHitters
+            np.testing.assert_array_equal(np.asarray(a.keys),
+                                          np.asarray(b.keys), err_msg=name)
+            np.testing.assert_array_equal(
+                np.asarray(a.estimate.value), np.asarray(b.estimate.value),
+                err_msg=name)
+        else:
+            np.testing.assert_array_equal(np.asarray(a.value),
+                                          np.asarray(b.value), err_msg=name)
+            np.testing.assert_array_equal(
+                np.asarray(a.variance), np.asarray(b.variance),
+                err_msg=name)
+
+
+def test_modes_identical_at_window_boundaries(key):
+    """batch_chunks == emit_every ⇒ both modes emit from the state after
+    the same chunk prefix; every registered query must agree exactly."""
+    agg = StreamAggregator(GaussianSource(), seed=11)
+    chunks = list(timestamped_stream(agg, 512, 16, 2048.0))
+    cfg = _cfg()
+    reg = _registry()
+    eb = BatchedExecutor(cfg, reg, key).run(chunks)
+    ep = PipelinedExecutor(cfg, reg, key).run(chunks)
+    assert len(eb) == len(ep) == 4
+    for a, b in zip(eb, ep):
+        _assert_results_equal(a.results, b.results)
+        assert (a.watermark, a.open_interval) == (b.watermark,
+                                                  b.open_interval)
+        assert (a.on_time, a.late, a.dropped) == (b.on_time, b.late,
+                                                  b.dropped)
+
+
+def test_modes_identical_adhoc_query_any_prefix(key):
+    """Ad-hoc query() after ANY common chunk prefix agrees exactly
+    (window boundary or not — the shared core is chunk-for-chunk)."""
+    agg = StreamAggregator(GaussianSource(), seed=12)
+    chunks = list(timestamped_stream(agg, 256, 6, 1024.0))
+    cfg = _cfg(batch_chunks=1, emit_every=10_000)
+    reg = _registry()
+    b = BatchedExecutor(cfg, reg, key)
+    p = PipelinedExecutor(cfg, reg, key)
+    for i, c in enumerate(chunks):
+        b.push(c)
+        p.push(c)
+        if i in (1, 4):
+            _assert_results_equal(b.query(), p.query())
+
+
+def _numpy_watermark_oracle(chunks, span, lateness, num_intervals):
+    """Independent reimplementation of the runtime's arrival accounting."""
+    max_time = -np.inf
+    open_iv = 0
+    on_time = late = dropped = 0
+    for c in chunks:
+        t = np.asarray(c.times, np.float32)
+        wmark = np.float32(max_time - lateness)
+        tgt = np.floor(t / np.float32(span)).astype(np.int64)
+        new_open = max(open_iv, int(tgt.max()))
+        oldest = new_open - num_intervals + 1
+        accept = (t >= wmark) & (tgt >= oldest)
+        on_time += int(np.sum(accept & (tgt >= open_iv)))
+        late += int(np.sum(accept & (tgt < open_iv)))
+        dropped += int(np.sum(~accept))
+        max_time = max(max_time, float(t.max()))
+        open_iv = new_open
+    return on_time, late, dropped
+
+
+@pytest.mark.slow
+def test_soak_out_of_order_equivalence_and_accounting(key):
+    """Soak: 60 chunks with bounded disorder. Modes stay identical and
+    the watermark accounting matches the numpy oracle exactly, with all
+    three classes (on-time / late / dropped) actually exercised."""
+    agg = StreamAggregator(GaussianSource(), seed=13)
+    chunks = list(timestamped_stream(agg, 512, 60, 4096.0))
+    # displacement > lateness ⇒ some items MUST drop; most stay on time.
+    chunks = perturb_event_times(chunks, jax.random.fold_in(key, 1),
+                                 max_displacement=0.35)
+    cfg = _cfg(num_intervals=4, interval_span=1.0, allowed_lateness=0.3,
+               batch_chunks=6, emit_every=6)
+    reg = _registry()
+    eb = BatchedExecutor(cfg, reg, key).run(chunks)
+    ep = PipelinedExecutor(cfg, reg, key).run(chunks)
+    assert len(eb) == len(ep) == 10
+    for a, b in zip(eb, ep):
+        _assert_results_equal(a.results, b.results)
+        assert (a.on_time, a.late, a.dropped) == (b.on_time, b.late,
+                                                  b.dropped)
+
+    total_items = 60 * 512
+    em = eb[-1]
+    assert em.on_time + em.late + em.dropped == total_items
+    oracle = _numpy_watermark_oracle(chunks, 1.0, 0.3, 4)
+    assert (em.on_time, em.late, em.dropped) == oracle
+    # The soak must exercise every accounting class.
+    assert em.on_time > 0 and em.late > 0 and em.dropped > 0
+    # Dropped items are the exception, not the rule.
+    assert em.dropped < 0.2 * total_items
+
+
+@pytest.mark.slow
+def test_soak_estimates_stay_calibrated_under_disorder(key):
+    """Under disorder the runtime's windowed SUM stays within its own
+    3σ bound of the exact sum over *accepted* items."""
+    agg = StreamAggregator(GaussianSource(), seed=14)
+    chunks = list(timestamped_stream(agg, 512, 40, 4096.0))
+    chunks = perturb_event_times(chunks, jax.random.fold_in(key, 2),
+                                 max_displacement=0.3)
+    cfg = _cfg(capacity=256, num_intervals=8, interval_span=0.5,
+               allowed_lateness=0.25, batch_chunks=8, emit_every=8)
+    reg = QueryRegistry().register("total", "sum")
+    ex = PipelinedExecutor(cfg, reg, key)
+    emissions = ex.run(chunks)
+
+    # Exact windowed sum over accepted items, via the numpy oracle.
+    max_time, open_iv = -np.inf, 0
+    accepted_by_iv: dict = {}
+    for c in chunks:
+        t = np.asarray(c.times, np.float32)
+        v = np.asarray(c.values, np.float32)
+        wmark = np.float32(max_time - 0.25)
+        tgt = np.floor(t / np.float32(0.5)).astype(np.int64)
+        open_iv = max(open_iv, int(tgt.max()))
+        oldest = open_iv - 8 + 1
+        acc = (t >= wmark) & (tgt >= oldest)
+        for iv in np.unique(tgt[acc]):
+            accepted_by_iv[int(iv)] = accepted_by_iv.get(int(iv), 0.0) + \
+                float(np.sum(v[acc & (tgt == iv)]))
+        max_time = max(max_time, float(t.max()))
+    live = range(open_iv - 8 + 1, open_iv + 1)
+    window_exact = sum(accepted_by_iv.get(iv, 0.0) for iv in live)
+
+    est = emissions[-1].results["total"]
+    bound = 3.0 * float(jnp.sqrt(est.variance)) + 1e-3
+    assert abs(float(est.value) - window_exact) < bound

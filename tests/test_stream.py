@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.stream import (GaussianSource, NetflowSource, PoissonSource,
                           StreamAggregator, TaxiSource, skewed)
@@ -58,6 +59,72 @@ def test_prefetcher_ordering_and_cursor():
     epochs = [pf.next()[0] for _ in range(5)]
     assert epochs == [0, 1, 2, 3, 4]
     assert pf.cursor >= 5
+
+
+def test_skewed_normalizes_mix():
+    src = skewed(GaussianSource(), (2.0, 1.0, 1.0))
+    np.testing.assert_allclose(src.mix, (0.5, 0.25, 0.25))
+
+
+def test_skewed_rejects_bad_mixes():
+    src = GaussianSource()
+    with pytest.raises(ValueError, match="nonnegative"):
+        skewed(src, (0.5, -0.1, 0.6))
+    with pytest.raises(ValueError, match="strata"):
+        skewed(src, (0.5, 0.5))
+    with pytest.raises(ValueError, match="positive total"):
+        skewed(src, (0.0, 0.0, 0.0))
+    with pytest.raises(ValueError, match="finite"):
+        skewed(src, (float("nan"), 0.5, 0.5))
+    with pytest.raises(ValueError, match="finite"):
+        skewed(src, (float("inf"), 0.5, 0.5))
+
+
+def test_skewed_zero_entry_allowed(key):
+    src = skewed(GaussianSource(), (0.5, 0.5, 0.0))
+    c = src.chunk(key, 10_000)
+    assert int(jnp.sum(c.stratum_ids == 2)) == 0
+
+
+def test_prefetcher_background_error_surfaces_on_next():
+    """A fetch failure in the background thread must raise on next(),
+    not hang the consumer or silently skip the epoch."""
+    def fetch(e):
+        if e == 2:
+            raise RuntimeError("boom at epoch 2")
+        return e * 10
+
+    pf = Prefetcher(fetch, depth=2)             # prefills epochs 0, 1
+    assert pf.next() == (0, 0)                  # background fetch(2) dies
+    # Whatever the thread interleaving, the consumer sees at most epoch 1
+    # and then the background failure — never a hang, never a skip to 3.
+    with pytest.raises(RuntimeError, match="epoch 2"):
+        for _ in range(5):
+            epoch, _ = pf.next()
+            assert epoch == 1
+
+
+def test_prefetcher_retries_failed_epoch():
+    """The epoch cursor must not advance past a failed fetch: a transient
+    failure is retried and the stream resumes without gaps."""
+    failures = {"left": 1}
+
+    def fetch(e):
+        if e == 2 and failures["left"] > 0:
+            failures["left"] -= 1
+            raise RuntimeError("transient")
+        return e * 10
+
+    pf = Prefetcher(fetch, depth=2)
+    seen = []
+    for _ in range(20):
+        if len(seen) == 5:
+            break
+        try:
+            seen.append(pf.next())
+        except RuntimeError:
+            continue                            # retry after the failure
+    assert seen == [(0, 0), (1, 10), (2, 20), (3, 30), (4, 40)]
 
 
 def test_token_window_deterministic():
