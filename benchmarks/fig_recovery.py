@@ -1,0 +1,133 @@
+"""Recovery benchmark: checkpoint overhead vs cadence, recovery latency
+vs replayed-suffix length.
+
+The fault-tolerance trade-off the README documents, measured: frequent
+checkpoints cost steady-state throughput (each snapshot is one
+device→host transfer of the full runtime state plus ``npz``
+serialization) but bound the replay work after a crash to
+``every_chunks`` chunks.  Rows:
+
+* ``fig_rec.ckpt.<mode>.none`` / ``.every<N>`` — per-chunk cost of a
+  full run with no / cadence-``N`` checkpointing; derived
+  ``items_per_sec``, ``ckpt_kib`` (serialized payload size),
+  ``snaps`` (checkpoints taken) and ``overhead_pct`` vs the
+  checkpoint-free baseline.
+* ``fig_rec.recover.suffix<L>`` — wall time of a full recovery
+  (deserialize + restore into a warm executor + replay L chunks +
+  drain); derived ``restore_ms`` (deserialize+restore only) and
+  ``chunks`` replayed.  Recovery scales with the suffix, not the
+  stream: the cadence knob directly buys recovery latency.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from benchmarks.common import emit
+from repro.runtime import (BatchedExecutor, Checkpointer,
+                           PipelinedExecutor, QueryRegistry, RuntimeConfig)
+from repro.runtime import checkpoint as ckp
+from repro.stream import GaussianSource, ReplayableStream, StreamAggregator
+
+
+def _registry():
+    return (QueryRegistry()
+            .register("avg", "mean")
+            .register("total", "sum")
+            .register("p", "quantile", qs=(0.5, 0.9), num_replicates=8))
+
+
+def _timed_run(ex, stream, num_chunks, key):
+    ex.reset(key)
+    t0 = time.perf_counter()
+    for c in stream.range(0, num_chunks):
+        ex.push(c)
+    ex.finalize()
+    return time.perf_counter() - t0
+
+
+def run(quick: bool | None = None) -> list:
+    quick = common.SMOKE if quick is None else quick
+    chunk_size = 256 if quick else 2048
+    num_chunks = 8 if quick else 32
+    cadences = (2, 4) if quick else (1, 2, 4, 8)
+    intervals = 4
+    rate = chunk_size * num_chunks / float(intervals)
+    key = jax.random.PRNGKey(0)
+
+    stream = ReplayableStream(
+        StreamAggregator(GaussianSource(), seed=29),
+        chunk_size=chunk_size, rate=rate)
+    total_items = chunk_size * num_chunks
+    reg = _registry()
+    cfg = RuntimeConfig(
+        num_strata=3, capacity=max(chunk_size // 8, 16),
+        num_intervals=intervals, interval_span=1.0,
+        allowed_lateness=0.5, batch_chunks=max(num_chunks // 4, 1),
+        emit_every=max(num_chunks // 4, 1))
+    rows = []
+
+    # --- Checkpoint overhead vs cadence, both executor modes. ---------
+    for make in (PipelinedExecutor, BatchedExecutor):
+        ex = make(cfg, reg, key)
+        ex.run(stream.prefix(cfg.batch_chunks))      # warm compile
+        base = _timed_run(ex, stream, num_chunks, key)
+        rows.append(emit(
+            f"fig_rec.ckpt.{ex.mode}.none",
+            base / num_chunks * 1e6,
+            f"items_per_sec={total_items / base:.0f}"))
+        for every in cadences:
+            ck = Checkpointer(every_chunks=every, keep=None)
+            ex.checkpointer = ck
+            wall = _timed_run(ex, stream, num_chunks, key)
+            ex.checkpointer = None
+            overhead = (wall - base) / base * 100.0
+            rows.append(emit(
+                f"fig_rec.ckpt.{ex.mode}.every{every}",
+                wall / num_chunks * 1e6,
+                f"items_per_sec={total_items / wall:.0f};"
+                f"ckpt_kib={len(ck.latest) / 1024:.1f};"
+                f"snaps={len(ck.saved)};"
+                f"overhead_pct={overhead:.1f}"))
+
+    # --- Recovery latency vs suffix length (pipelined). ---------------
+    victim = PipelinedExecutor(cfg, reg, key)
+    ck = Checkpointer(every_chunks=1, keep=None)   # a payload per offset
+    victim.checkpointer = ck
+    victim.reset(key)
+    ck.save(victim)                                # offset-0 bootstrap
+    for c in stream.range(0, num_chunks):
+        victim.push(c)
+    victim.finalize()
+    payloads = dict(ck.saved)
+
+    recovery = PipelinedExecutor(cfg, reg, jax.random.PRNGKey(1))
+    recovery.run(stream.prefix(cfg.emit_every))    # warm compile
+    suffixes = sorted({max(num_chunks // 8, 1), num_chunks // 4,
+                       num_chunks // 2, num_chunks})
+    for suffix in suffixes:
+        payload = payloads[num_chunks - suffix]
+        t0 = time.perf_counter()
+        ckpt = ckp.from_bytes(payload, recovery.state)
+        recovery.restore(ckpt)
+        restore_s = time.perf_counter() - t0
+        for c in stream.range(ckpt.stream_offset, num_chunks):
+            recovery.push(c)
+        recovery.finalize()
+        wall = time.perf_counter() - t0
+        rows.append(emit(
+            f"fig_rec.recover.suffix{suffix}",
+            wall * 1e6,
+            f"restore_ms={restore_s * 1e3:.2f};chunks={suffix}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="toy sizes (same as the suite-wide --smoke lane)")
+    args = ap.parse_args()
+    run(quick=args.quick)

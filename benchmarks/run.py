@@ -28,7 +28,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_kernels, bench_train, fig5_microbench,
                             fig6_rates_windows, fig7_scale_skew,
                             fig8_means_over_time, fig9_network_traffic,
-                            fig10_taxi, fig_quantiles, fig_runtime_modes)
+                            fig10_taxi, fig_quantiles, fig_recovery,
+                            fig_runtime_modes)
     modules = [
         ("fig5(a-c) microbenchmarks", fig5_microbench),
         ("fig6 arrival rates + windows", fig6_rates_windows),
@@ -38,6 +39,7 @@ def main(argv=None) -> None:
         ("fig10 taxi case study", fig10_taxi),
         ("quantile engine accuracy/latency", fig_quantiles),
         ("runtime modes: batched vs pipelined", fig_runtime_modes),
+        ("recovery: checkpoint overhead + replay latency", fig_recovery),
         ("kernel bench", bench_kernels),
         ("training-plane bench", bench_train),
     ]

@@ -5,8 +5,9 @@ The two executors mirror the paper's two stream-processing models
 (batched / Spark Streaming vs pipelined / Flink) over one shared jitted
 OASRS core; see ``repro.runtime.executor`` for the architecture notes.
 """
-from repro.runtime import (controller, executor, records, registry,
-                           watermark)
+from repro.runtime import (checkpoint, controller, executor, records,
+                           registry, watermark)
+from repro.runtime.checkpoint import Checkpointer, RuntimeCheckpoint
 from repro.runtime.controller import ControllerConfig, ControllerState
 from repro.runtime.executor import (BatchedExecutor, Emission,
                                     PipelinedExecutor, RuntimeConfig,
@@ -17,7 +18,8 @@ from repro.runtime.records import (TimestampedChunk, perturb_event_times,
 from repro.runtime.registry import QueryRegistry, StandingQuery
 
 __all__ = [
-    "controller", "executor", "records", "registry", "watermark",
+    "checkpoint", "controller", "executor", "records", "registry",
+    "watermark", "Checkpointer", "RuntimeCheckpoint",
     "ControllerConfig", "ControllerState", "BatchedExecutor", "Emission",
     "PipelinedExecutor", "RuntimeConfig", "RuntimeState", "init_state",
     "TimestampedChunk", "perturb_event_times", "stamp", "stamp_sharded",

@@ -1,0 +1,386 @@
+"""Checkpoint/restore for exactly-once fault-tolerant execution.
+
+StreamApprox's error bounds (Eqs. 5–9) certify an estimate *given* that
+every stream interval contributed exactly once to the sample.  A worker
+crash that silently drops or double-counts intervals voids them — which
+is why Flink and Spark pair sampling with checkpointed exactly-once
+state.  This module is that pairing for the dual-mode runtime:
+
+* :class:`RuntimeCheckpoint` — a complete, serializable snapshot of one
+  executor: the device pytree (OASRS reservoirs incl. their PRNG
+  counters, interval-ring slot assignments, watermark frontier +
+  on-time/late/dropped counters, controller baseline/EMA) plus the host
+  cursors (stream offset, emission cursor, emission-period position,
+  micro-batch size).
+* :class:`Checkpointer` — cadence-driven sink: every ``every_chunks``
+  pushes it captures + serializes the executor (the serialized payload
+  is the only thing assumed to survive a crash).
+* ``capture`` / ``restore_into`` — the executor hooks.  Restoring into a
+  *fresh* executor and replaying the stream suffix from
+  ``stream_offset`` (via ``repro.stream.replay.ReplayableStream`` —
+  chunks are pure functions of their offset) reproduces the
+  uninterrupted run **bitwise**: same registered answers, same error
+  widths, same watermark accounting.  The crash-injection harness in
+  ``tests/harness_crash.py`` is the spec.
+
+Exactly-once semantics = state snapshot + deterministic source rewind +
+emission-cursor dedupe.  Emissions recorded after the snapshot but
+before the crash are re-emitted on recovery with the SAME monotonic
+``Emission.index`` (the registry answers cursor survives the restore),
+so a downstream consumer keeps the first copy per index and the output
+sequence equals the uninterrupted run's.
+
+Serialization is ``numpy.savez`` of the flattened state pytree plus a
+JSON header carrying the host cursors and a human-readable manifest
+(``watermark.export`` / ``controller.export``) — no pickle, so payloads
+are portable across processes and inspectable with :func:`peek`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.runtime import controller as ctl
+from repro.runtime import watermark as wmk
+
+FORMAT = 1
+_HEADER = "__header__"
+
+
+#: RuntimeConfig fields that change event-time or emission semantics
+#: without changing any array shape — a restore across differing values
+#: would silently mis-route replayed items (or re-emit answers over
+#: different windows under the same indices), so they are fingerprinted
+#: into the checkpoint and validated on restore.
+_SEMANTIC_FIELDS = ("num_strata", "num_intervals", "interval_span",
+                    "allowed_lateness", "num_shards", "emit_every",
+                    "accuracy_query", "controller", "queries")
+
+
+def config_fingerprint(cfg, registry) -> dict:
+    fp = {f: getattr(cfg, f) for f in
+          ("num_strata", "num_intervals", "interval_span",
+           "allowed_lateness", "num_shards", "emit_every",
+           "accuracy_query")}
+    # Controller feedback is deterministic state evolution (accuracy
+    # budget → adopted capacities → reservoir contents), so its targets
+    # are part of the replay contract. BudgetConfig holds jnp scalars —
+    # converted to plain python so the JSON round-trip compares equal.
+    b = cfg.controller.budget
+    fp["controller"] = {
+        "budget": None if b is None else {
+            "target_half_width": float(b.target_half_width),
+            "z": float(b.z),
+            "min_per_stratum": int(b.min_per_stratum),
+            "max_per_stratum": int(b.max_per_stratum)},
+        "latency_budget_s": cfg.controller.latency_budget_s,
+        "ema": cfg.controller.ema,
+        "min_per_stratum": cfg.controller.min_per_stratum,
+    }
+    # The registered query set is part of the answers contract too:
+    # index-dedupe only works if emission i answers the same questions —
+    # including their answer-shaping parameters (a quantile query with
+    # different qs is a different question under the same name). Lists,
+    # not tuples, so the JSON round-trip compares equal. A `count`
+    # predicate is a callable and can't be fingerprinted portably; its
+    # presence is recorded, its identity is the caller's contract.
+    fp["queries"] = [
+        [q.name, q.kind,
+         None if q.qs is None else list(q.qs),
+         None if q.edges is None else list(q.edges),
+         q.k, q.num_replicates, q.method, q.predicate is not None]
+        for q in registry.queries]
+    return fp
+
+
+def incorporated_offset(ex) -> int:
+    """Chunks whose effect is in the executor's device state: pushes
+    minus (batched-mode) pending chunks awaiting a flush — the single
+    definition of a checkpoint's ``stream_offset``."""
+    return ex.chunks_pushed - len(getattr(ex, "_pending", ()))
+
+
+@dataclasses.dataclass
+class RuntimeCheckpoint:
+    """One executor snapshot: device state + host cursors.
+
+    ``stream_offset`` counts the chunks whose effect is *in* ``state``
+    (for the batched executor this snaps to the last flush boundary —
+    pushed-but-pending chunks are recovered by replay, not serialized).
+    ``emissions_done`` is the registry answers cursor: the index the
+    next emission will carry, which makes re-emitted suffix answers
+    idempotent under index-dedupe.
+    """
+    mode: str                 # "batched" | "pipelined"
+    stream_offset: int        # chunks fully incorporated into `state`
+    emissions_done: int       # monotonic emission cursor at the snapshot
+    items_since_emit: int     # items incorporated since the last emission
+    chunks_since_emit: int    # pipelined emission-period position
+    batch_chunks: int         # batched micro-batch size (pressure-resized)
+    last_latency: float       # controller feedback carried into next step
+    state: Any                # RuntimeState pytree (device or numpy leaves)
+    config: dict              # semantic RuntimeConfig fingerprint
+
+
+def capture(ex) -> RuntimeCheckpoint:
+    """Snapshot an executor (host-synchronizing — call at chunk
+    boundaries, never from inside the pipelined hot loop).
+
+    The batched executor's pending (unflushed) chunks are deliberately
+    NOT captured: the snapshot's ``stream_offset`` points before them
+    and deterministic replay re-pushes them, which re-forms the same
+    micro-batches — the source-rewind half of exactly-once.
+    """
+    pending_items = sum(int(c.values.size)
+                        for c in getattr(ex, "_pending", ()))
+    return RuntimeCheckpoint(
+        mode=ex.mode,
+        stream_offset=incorporated_offset(ex),
+        emissions_done=ex._emission_cursor,
+        items_since_emit=ex._items_since_emit - pending_items,
+        chunks_since_emit=getattr(ex, "_chunks_since_emit", 0),
+        batch_chunks=getattr(ex, "batch_chunks", 0),
+        last_latency=float(ex._last_latency),
+        state=jax.device_get(ex.state),
+        config=config_fingerprint(ex.cfg, ex.registry),
+    )
+
+
+def restore_into(ex, ckpt: RuntimeCheckpoint) -> None:
+    """Load a checkpoint into an executor, KEEPING its compiled steps.
+
+    The executor may be freshly constructed (any PRNG key — the
+    snapshot's keys overwrite it) or warm from earlier runs (its jitted
+    step closures survive, so recovery never re-pays trace+compile).
+    After restoring, replay the stream suffix from
+    ``ckpt.stream_offset``; the continuation is bitwise-identical to an
+    uninterrupted run.
+    """
+    if ckpt.mode != ex.mode:
+        raise ValueError(
+            f"checkpoint was taken from a {ckpt.mode!r} executor; "
+            f"cannot restore into {ex.mode!r} (the modes' host cursors "
+            "are not interchangeable)")
+    here = config_fingerprint(ex.cfg, ex.registry)
+    for f in _SEMANTIC_FIELDS:
+        # Shape checks can't catch these (e.g. interval_span, the
+        # accuracy budget): replay would silently mis-route items or
+        # re-emit different answers under the same indices, so
+        # mismatches are refused by fingerprint.
+        if ckpt.config.get(f) != here[f]:
+            raise ValueError(
+                f"checkpoint was taken under {f}={ckpt.config.get(f)!r}, "
+                f"executor has {f}={here[f]!r}; restoring across "
+                "event-time/emission semantics would corrupt the "
+                "replayed answer stream")
+    _validate_state(ex.state, ckpt.state)
+    ex.state = jax.device_put(ckpt.state)
+    ex.emissions = []
+    ex.chunks_pushed = ckpt.stream_offset
+    ex._emission_cursor = ckpt.emissions_done
+    ex._items_since_emit = ckpt.items_since_emit
+    ex._last_latency = ckpt.last_latency
+    if ex.mode == "batched":
+        ex._pending = []
+        ex.batch_chunks = ckpt.batch_chunks
+    elif ex.mode == "pipelined":
+        ex._chunks_since_emit = ckpt.chunks_since_emit
+        ex._emit_t0 = time.perf_counter()
+
+
+def _validate_state(template, state) -> None:
+    """Refuse mismatched restores with a named-leaf error instead of a
+    shape explosion inside the first jitted step."""
+    t_def = jax.tree_util.tree_structure(template)
+    s_def = jax.tree_util.tree_structure(state)
+    if t_def != s_def:
+        raise ValueError(
+            f"checkpoint state structure {s_def} does not match this "
+            f"executor's {t_def} (different RuntimeConfig?)")
+    t_paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    s_leaves = jax.tree_util.tree_leaves(state)
+    for (path, t_leaf), s_leaf in zip(t_paths, s_leaves):
+        name = jax.tree_util.keystr(path)
+        if tuple(t_leaf.shape) != tuple(np.shape(s_leaf)):
+            raise ValueError(
+                f"checkpoint leaf {name} has shape {np.shape(s_leaf)}, "
+                f"executor expects {tuple(t_leaf.shape)} (num_strata / "
+                "num_intervals / num_shards / N_max mismatch)")
+        if np.dtype(t_leaf.dtype) != np.dtype(s_leaf.dtype):
+            raise ValueError(
+                f"checkpoint leaf {name} has dtype {s_leaf.dtype}, "
+                f"executor expects {t_leaf.dtype}")
+
+
+# ---------------------------------------------------------------------------
+# Serialization (savez payload + JSON header; no pickle).
+# ---------------------------------------------------------------------------
+
+def to_bytes(ckpt: RuntimeCheckpoint) -> bytes:
+    """Serialize a checkpoint to a self-describing byte payload."""
+    paths_and_leaves = jax.tree_util.tree_flatten_with_path(ckpt.state)[0]
+    header = {
+        "format": FORMAT,
+        "mode": ckpt.mode,
+        "stream_offset": ckpt.stream_offset,
+        "emissions_done": ckpt.emissions_done,
+        "items_since_emit": ckpt.items_since_emit,
+        "chunks_since_emit": ckpt.chunks_since_emit,
+        "batch_chunks": ckpt.batch_chunks,
+        "last_latency": ckpt.last_latency,
+        "config": ckpt.config,
+        "leaf_paths": [jax.tree_util.keystr(p) for p, _ in paths_and_leaves],
+        "manifest": manifest(ckpt),
+    }
+    buf = io.BytesIO()
+    arrays = {f"leaf_{i}": np.asarray(leaf)
+              for i, (_, leaf) in enumerate(paths_and_leaves)}
+    np.savez(buf, **{_HEADER: np.asarray(json.dumps(header))}, **arrays)
+    return buf.getvalue()
+
+
+def from_bytes(data: bytes, template_state) -> RuntimeCheckpoint:
+    """Deserialize against an executor's state pytree (the template
+    supplies the tree structure; leaves are validated by name, shape and
+    dtype before unflattening)."""
+    with np.load(io.BytesIO(data), allow_pickle=False) as z:
+        header = json.loads(str(z[_HEADER][()]))
+        if header.get("format") != FORMAT:
+            raise ValueError(
+                f"unsupported checkpoint format {header.get('format')!r}")
+        leaves = [z[f"leaf_{i}"] for i in range(len(header["leaf_paths"]))]
+    t_paths = jax.tree_util.tree_flatten_with_path(template_state)[0]
+    if len(t_paths) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, executor state has "
+            f"{len(t_paths)}")
+    for (path, _), name in zip(t_paths, header["leaf_paths"]):
+        if jax.tree_util.keystr(path) != name:
+            raise ValueError(
+                f"checkpoint leaf order mismatch: payload has {name}, "
+                f"executor expects {jax.tree_util.keystr(path)}")
+    treedef = jax.tree_util.tree_structure(template_state)
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    ckpt = RuntimeCheckpoint(
+        mode=header["mode"],
+        stream_offset=header["stream_offset"],
+        emissions_done=header["emissions_done"],
+        items_since_emit=header["items_since_emit"],
+        chunks_since_emit=header["chunks_since_emit"],
+        batch_chunks=header["batch_chunks"],
+        last_latency=header["last_latency"],
+        state=state,
+        config=header["config"],
+    )
+    _validate_state(template_state, state)
+    return ckpt
+
+
+def peek(data: bytes) -> dict:
+    """Read a payload's JSON header (cursors + watermark/controller
+    manifest) without needing an executor or its state template."""
+    with np.load(io.BytesIO(data), allow_pickle=False) as z:
+        return json.loads(str(z[_HEADER][()]))
+
+
+def manifest(ckpt: RuntimeCheckpoint) -> dict:
+    """Human-readable summary of the snapshot's adaptive state."""
+    st = ckpt.state
+    return {
+        "watermark": wmk.export(st.wm),
+        "controller": ctl.export(st.ctrl),
+        "open_interval": np.asarray(st.open_interval).tolist(),
+        "slot_interval": np.asarray(st.slot_interval).tolist(),
+    }
+
+
+def save(ckpt: RuntimeCheckpoint, path: str) -> None:
+    with open(path, "wb") as f:
+        f.write(to_bytes(ckpt))
+
+
+def load(path: str, template_state) -> RuntimeCheckpoint:
+    with open(path, "rb") as f:
+        return from_bytes(f.read(), template_state)
+
+
+# ---------------------------------------------------------------------------
+# Cadence-driven checkpointing.
+# ---------------------------------------------------------------------------
+
+class Checkpointer:
+    """Checkpoint sink an executor calls after every push.
+
+    Every ``every_chunks`` pushes the executor is captured and
+    SERIALIZED immediately — ``saved`` holds ``(stream_offset, payload)``
+    byte payloads, the only artifact recovery may rely on (the live
+    executor object is assumed lost in the crash).  ``keep`` bounds
+    retention (newest-last; ``None`` keeps all, e.g. for the recovery-
+    latency benchmark).  ``directory`` additionally writes each payload
+    to ``ckpt_<offset>.npz`` for cross-process recovery.
+
+    Cadence is the overhead/recovery trade-off: a checkpoint costs one
+    device→host transfer of the state pytree plus serialization, and the
+    expected replay length after a crash is ``every_chunks / 2`` chunks
+    (measured by ``benchmarks/fig_recovery.py``).
+    """
+
+    def __init__(self, every_chunks: int, keep: Optional[int] = 1,
+                 directory: Optional[str] = None):
+        if every_chunks < 1:
+            raise ValueError(f"every_chunks must be >= 1, got {every_chunks}")
+        if keep is not None and keep < 1:
+            raise ValueError(f"keep must be >= 1 or None, got {keep}")
+        self.every_chunks = every_chunks
+        self.keep = keep
+        self.directory = directory
+        self.saved: List[Tuple[int, bytes]] = []
+        self.overhead_s = 0.0          # wall time spent capturing+writing
+
+    @property
+    def latest(self) -> Optional[bytes]:
+        return self.saved[-1][1] if self.saved else None
+
+    @property
+    def latest_offset(self) -> Optional[int]:
+        return self.saved[-1][0] if self.saved else None
+
+    def clear(self) -> None:
+        """Drop retained payloads. ``executor.reset()`` calls this: a
+        reset starts a NEW stream, and without it the offset-dedupe in
+        :meth:`save` would keep serving the previous run's snapshots at
+        matching offsets — recovering old reservoirs into a new stream.
+        (Overhead accounting stays cumulative; files in ``directory``
+        are the previous run's artifacts and are left alone.)"""
+        self.saved = []
+
+    def maybe(self, ex) -> bool:
+        """Cadence hook (executors call this after each push)."""
+        if ex.chunks_pushed % self.every_chunks != 0:
+            return False
+        return self.save(ex)
+
+    def save(self, ex) -> bool:
+        """Capture + serialize now.  Skips (returns False) when the
+        executor's incorporated offset hasn't moved since the last save
+        — in batched mode pushes between flushes change no state, so
+        checkpoints snap to flush boundaries."""
+        offset = incorporated_offset(ex)
+        if self.saved and self.saved[-1][0] == offset:
+            return False
+        t0 = time.perf_counter()
+        payload = to_bytes(capture(ex))
+        self.saved.append((offset, payload))
+        if self.keep is not None:
+            del self.saved[:-self.keep]
+        if self.directory is not None:
+            with open(f"{self.directory}/ckpt_{offset:08d}.npz", "wb") as f:
+                f.write(payload)
+        self.overhead_s += time.perf_counter() - t0
+        return True

@@ -32,6 +32,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import adaptive
 from repro.core import error as err
@@ -64,6 +65,31 @@ def init(capacity: jax.Array) -> ControllerState:
     return ControllerState(capacity=cap, base_capacity=cap,
                            latency_ema=jnp.zeros((), jnp.float32),
                            pressure=jnp.zeros((), jnp.float32))
+
+
+def export(ctrl: ControllerState) -> dict:
+    """Plain-python view of the controller state (checkpoint manifest).
+
+    ``capacity``/``base_capacity`` come back as (nested, when sharded)
+    lists, the EMA/pressure scalars as floats — JSON-serializable so the
+    checkpoint header describes the adaptive knobs without the payload.
+    """
+    return {
+        "capacity": np.asarray(ctrl.capacity).tolist(),
+        "base_capacity": np.asarray(ctrl.base_capacity).tolist(),
+        "latency_ema": np.asarray(ctrl.latency_ema).tolist(),
+        "pressure": np.asarray(ctrl.pressure).tolist(),
+    }
+
+
+def from_export(d: dict) -> ControllerState:
+    """Rebuild a :class:`ControllerState` from :func:`export` output."""
+    return ControllerState(
+        capacity=jnp.asarray(d["capacity"], jnp.int32),
+        base_capacity=jnp.asarray(d["base_capacity"], jnp.int32),
+        latency_ema=jnp.asarray(d["latency_ema"], jnp.float32),
+        pressure=jnp.asarray(d["pressure"], jnp.float32),
+    )
 
 
 def update(ctrl: ControllerState, cfg: ControllerConfig,

@@ -40,6 +40,7 @@ from repro.core import error as err
 from repro.core import oasrs
 from repro.core import quantile as qt
 from repro.core import window as win
+from repro.runtime import checkpoint as ckp
 from repro.runtime import controller as ctl
 from repro.runtime import watermark as wmk
 from repro.runtime.records import TimestampedChunk
@@ -259,7 +260,8 @@ class _ExecutorBase:
     mode = "base"
 
     def __init__(self, cfg: RuntimeConfig, registry: QueryRegistry,
-                 key: jax.Array):
+                 key: jax.Array,
+                 checkpointer: Optional[ckp.Checkpointer] = None):
         if len(registry) == 0:
             raise ValueError("register at least one standing query")
         if cfg.accuracy_query is not None:
@@ -278,7 +280,12 @@ class _ExecutorBase:
         self.registry = registry
         registry.freeze()     # traced steps close over the query list
         self.state = init_state(cfg, key)
+        self.checkpointer = checkpointer
         self.emissions: List[Emission] = []
+        self.chunks_pushed = 0        # stream offset: chunks accepted so far
+        self._emission_cursor = 0     # monotonic Emission.index (survives
+        #                               restore — the answers cursor a
+        #                               downstream dedupes re-emissions by)
         self._items_since_emit = 0
         self._last_latency = 0.0
         self._query_fn = jax.jit(
@@ -299,8 +306,30 @@ class _ExecutorBase:
         """
         self.state = init_state(self.cfg, key)
         self.emissions = []
+        self.chunks_pushed = 0
+        self._emission_cursor = 0
         self._items_since_emit = 0
         self._last_latency = 0.0
+        if self.checkpointer is not None:
+            # New stream ⇒ the old run's snapshots must not survive as
+            # recovery candidates (offset-dedupe would even skip
+            # re-saving over them).
+            self.checkpointer.clear()
+
+    def snapshot(self) -> ckp.RuntimeCheckpoint:
+        """Capture a complete, serializable checkpoint of this executor
+        (state pytree + host cursors). Host-synchronizing — call at
+        chunk boundaries, like an emission."""
+        return ckp.capture(self)
+
+    def restore(self, ckpt) -> None:
+        """Restore a checkpoint (a :class:`RuntimeCheckpoint` or its
+        serialized bytes), KEEPING compiled steps warm. Replay the
+        stream suffix from ``ckpt.stream_offset`` afterwards; the
+        continuation is bitwise-identical to an uninterrupted run."""
+        if isinstance(ckpt, (bytes, bytearray)):
+            ckpt = ckp.from_bytes(bytes(ckpt), self.state)
+        ckp.restore_into(self, ckpt)
 
     def run(self, chunks: Iterable[TimestampedChunk]) -> List[Emission]:
         for c in chunks:
@@ -330,12 +359,18 @@ class _ExecutorBase:
         cap = self.state.ctrl.capacity
         if self.cfg.num_shards > 1:
             cap = jnp.sum(cap, axis=0)     # global capacity = Σ shard caps
-        em = Emission(index=len(self.emissions), results=results,
+        # The index comes from the monotonic cursor, NOT len(emissions):
+        # a restored executor's emissions list restarts empty but its
+        # cursor continues from the checkpoint, so re-emitted suffix
+        # answers carry the same indices as the uninterrupted run
+        # (exactly-once output under index-dedupe).
+        em = Emission(index=self._emission_cursor, results=results,
                       watermark=wmark, open_interval=open_iv,
                       on_time=on_time, late=late, dropped=dropped,
                       capacity=cap, latency_s=latency_s,
                       items=self._items_since_emit)
         self.emissions.append(em)
+        self._emission_cursor += 1
         self._items_since_emit = 0
         return em
 
@@ -354,8 +389,9 @@ class BatchedExecutor(_ExecutorBase):
     mode = "batched"
 
     def __init__(self, cfg: RuntimeConfig, registry: QueryRegistry,
-                 key: jax.Array):
-        super().__init__(cfg, registry, key)
+                 key: jax.Array,
+                 checkpointer: Optional[ckp.Checkpointer] = None):
+        super().__init__(cfg, registry, key, checkpointer)
         self.batch_chunks = cfg.batch_chunks
         self._pending: List[TimestampedChunk] = []
         self._step_cache: dict = {}
@@ -396,8 +432,15 @@ class BatchedExecutor(_ExecutorBase):
     def push(self, chunk: TimestampedChunk) -> None:
         self._pending.append(chunk)
         self._items_since_emit += int(chunk.values.size)
+        self.chunks_pushed += 1
         if len(self._pending) >= self.batch_chunks:
             self._flush()
+        if self.checkpointer is not None:
+            # After the (possible) flush, so a cadence-aligned snapshot
+            # sees the freshest incorporated state. Snapshots between
+            # flushes snap to the last flush boundary — pending chunks
+            # are recovered by replay, not serialized.
+            self.checkpointer.maybe(self)
 
     def _flush(self) -> None:
         if not self._pending:
@@ -438,8 +481,9 @@ class PipelinedExecutor(_ExecutorBase):
     mode = "pipelined"
 
     def __init__(self, cfg: RuntimeConfig, registry: QueryRegistry,
-                 key: jax.Array):
-        super().__init__(cfg, registry, key)
+                 key: jax.Array,
+                 checkpointer: Optional[ckp.Checkpointer] = None):
+        super().__init__(cfg, registry, key, checkpointer)
         self.trace_count = 0
         ingest = _ingest_chunk
         if cfg.num_shards > 1:
@@ -475,8 +519,14 @@ class PipelinedExecutor(_ExecutorBase):
         self.state = self._step(self.state, chunk)     # async dispatch
         self._items_since_emit += int(chunk.values.size)
         self._chunks_since_emit += 1
+        self.chunks_pushed += 1
         if self._chunks_since_emit >= self.cfg.emit_every:
             self._emit_now()
+        if self.checkpointer is not None:
+            # Cadence boundary only: capture() blocks on the state, but
+            # the per-push hot path above stays dispatch-only (trace
+            # count and jaxpr asserted unchanged in tests).
+            self.checkpointer.maybe(self)
 
     def _emit_now(self) -> None:
         # Emission boundary — the ONLY place the pipeline touches host.

@@ -96,8 +96,8 @@ def timestamped_stream(aggregator: StreamAggregator, chunk_size: int,
 
 
 def perturb_event_times(chunks: Sequence[TimestampedChunk], key: jax.Array,
-                        max_displacement: float
-                        ) -> list[TimestampedChunk]:
+                        max_displacement: float,
+                        offset: int = 0) -> list[TimestampedChunk]:
     """Inject bounded out-of-order arrival into a timestamped stream.
 
     Each item's event time is shifted *backwards* by a uniform amount in
@@ -105,10 +105,16 @@ def perturb_event_times(chunks: Sequence[TimestampedChunk], key: jax.Array,
     fixed — so every item arrives at most ``max_displacement`` event-time
     units after newer items, the exact disorder bound a watermark with
     ``allowed_lateness >= max_displacement`` absorbs without drops.
+
+    ``offset`` is the absolute stream position of ``chunks[0]``: the
+    per-chunk key folds in ``offset + i``, so perturbing a suffix of a
+    stream reproduces exactly the same displacements as perturbing the
+    full stream — the property offset-addressable replay (fault
+    recovery) depends on.
     """
     out = []
     for i, c in enumerate(chunks):
-        k = jax.random.fold_in(key, i)
+        k = jax.random.fold_in(key, offset + i)
         shift = max_displacement * jax.random.uniform(k, c.times.shape)
         out.append(dataclasses.replace(
             c, times=jnp.maximum(c.times - shift, 0.0)))

@@ -21,6 +21,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.utils import dataclass_pytree
 
@@ -48,6 +49,31 @@ def init() -> WatermarkState:
 def watermark(wm: WatermarkState, allowed_lateness: float) -> jax.Array:
     """Current watermark; ``-inf``-ish before any item arrived."""
     return wm.max_time - jnp.float32(allowed_lateness)
+
+
+def export(wm: WatermarkState) -> dict:
+    """Plain-python view of the frontier + counters (checkpoint manifest).
+
+    Scalars come back as Python floats/ints; sharded ``[W]``-stacked
+    states come back as nested lists — both JSON-serializable, so the
+    checkpoint header stays self-describing without the binary payload.
+    """
+    return {
+        "max_time": np.asarray(wm.max_time).tolist(),
+        "on_time": np.asarray(wm.on_time).tolist(),
+        "late": np.asarray(wm.late).tolist(),
+        "dropped": np.asarray(wm.dropped).tolist(),
+    }
+
+
+def from_export(d: dict) -> WatermarkState:
+    """Rebuild a :class:`WatermarkState` from :func:`export` output."""
+    return WatermarkState(
+        max_time=jnp.asarray(d["max_time"], jnp.float32),
+        on_time=jnp.asarray(d["on_time"], jnp.int32),
+        late=jnp.asarray(d["late"], jnp.int32),
+        dropped=jnp.asarray(d["dropped"], jnp.int32),
+    )
 
 
 def interval_of(times: jax.Array, span: float) -> jax.Array:

@@ -1,18 +1,92 @@
-"""Replay tool — paper §6.1 "Methodology".
+"""Replay tools: offset-addressable deterministic streams + the §6.1
+throughput methodology.
 
-Feeds a stream program at increasing arrival rates until it saturates, and
-reports the peak sustainable throughput (items/sec). On this CPU container
-the numbers calibrate the *relative* speedups the paper reports (OASRS vs
-SRS vs STS vs native); the absolute TPU numbers come from the roofline model
-(EXPERIMENTS.md §Roofline).
+**Deterministic replay** (:class:`ReplayableStream`) is the source-rewind
+half of exactly-once recovery: every chunk is a pure function of its
+integer stream offset — payloads from the aggregator's counter-based PRNG
+(``fold_in(seed, offset)``), event times from the offset's position on
+the arrival ramp, and (optional) bounded disorder from a per-offset
+folded key.  Two independently constructed streams with the same
+parameters therefore produce bitwise-identical chunks at every offset,
+and replaying a *suffix* after restoring a checkpoint regenerates
+exactly the chunks the uninterrupted run saw (property-tested in
+``tests/test_checkpoint.py``).
+
+**Throughput replay** (``measure_window_program`` / ``saturation_search``
+— paper §6.1 "Methodology") feeds a stream program at increasing arrival
+rates until it saturates and reports the peak sustainable rate.  On this
+CPU container the numbers calibrate the *relative* speedups the paper
+reports (OASRS vs SRS vs STS vs native); the absolute TPU numbers come
+from the roofline model (EXPERIMENTS.md §Roofline).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from typing import Callable, Iterator, List
 
 import jax
+
+from repro.stream.aggregator import StreamAggregator
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayableStream:
+    """Offset-addressable timestamped stream (the recovery source).
+
+    ``chunk_at(e)`` depends ONLY on the constructor parameters and the
+    integer offset ``e`` — no iterator state, no process-lifetime PRNG —
+    so a fresh process can regenerate any suffix exactly.  ``chunk_size``
+    is items per chunk (per shard when ``num_shards > 1``); ``rate`` is
+    items per event-time unit, so chunk ``e`` covers event times
+    ``[e·span, (e+1)·span)`` with ``span = chunk_size / rate`` — the
+    same stamping as ``records.timestamped_stream``.  ``disorder > 0``
+    injects bounded out-of-order arrival (backward shifts up to
+    ``disorder`` event-time units) keyed by the absolute offset, so late
+    arrivals that cross a crash point replay identically.
+    """
+    aggregator: StreamAggregator
+    chunk_size: int            # items per chunk (per shard when sharded)
+    rate: float                # items per event-time unit
+    num_shards: int = 1
+    disorder: float = 0.0      # max backward event-time displacement
+    disorder_seed: int = 0
+
+    @property
+    def span(self) -> float:
+        """Event time covered by one chunk."""
+        return self.chunk_size / self.rate
+
+    def chunk_at(self, offset: int):
+        """The chunk at stream position ``offset`` (pure function)."""
+        # Imported lazily: repro.runtime.records itself imports the
+        # stream package, so a module-level import here would cycle.
+        from repro.runtime import records as rec
+        t0 = offset * self.span
+        if self.num_shards == 1:
+            c = rec.stamp(
+                self.aggregator.interval_chunk(offset, self.chunk_size),
+                t0, self.rate)
+        else:
+            c = rec.stamp_sharded(
+                self.aggregator.sharded_interval(
+                    offset, self.num_shards, self.chunk_size),
+                t0, self.rate)
+        if self.disorder > 0.0:
+            c = rec.perturb_event_times(
+                [c], jax.random.PRNGKey(self.disorder_seed),
+                self.disorder, offset=offset)[0]
+        return c
+
+    def range(self, start: int, stop: int) -> Iterator:
+        """Chunks ``start .. stop-1`` — the replay suffix after recovery
+        is ``range(ckpt.stream_offset, num_chunks)``."""
+        for e in range(start, stop):
+            yield self.chunk_at(e)
+
+    def prefix(self, num_chunks: int) -> List:
+        """The first ``num_chunks`` chunks (an uninterrupted run's input)."""
+        return list(self.range(0, num_chunks))
 
 
 @dataclasses.dataclass

@@ -1,0 +1,161 @@
+"""Crash-injection harness — the executable spec of exactly-once recovery.
+
+The archetype: the checkpoint subsystem exists so *this* can prove
+exactly-once.  ``crash_and_recover`` runs an executor with cadence
+checkpointing, "kills the process" after chunk ``crash_after`` (the only
+thing that survives is the latest SERIALIZED checkpoint payload —
+never the live executor object), restores a different executor from the
+bytes, and replays the stream suffix via the offset-addressable
+``ReplayableStream``.  ``assert_exactly_once`` then checks the recovered
+output against an uninterrupted reference run **bitwise**: registered
+answers, Eq. 5–9 error widths, watermark accounting, controller
+capacity, emission indices.
+
+Dedupe semantics: emissions recorded after the snapshot but before the
+crash are re-emitted on recovery with the same monotonic
+``Emission.index``; the authoritative output stream is the pre-crash
+emissions below the checkpoint's answers cursor plus everything the
+recovered run emits (``exactly_once_output``) — first copy per index
+wins, exactly what a downstream consumer with index-dedupe sees.
+"""
+import numpy as np
+
+from repro.runtime import checkpoint as ckp
+from repro.runtime.checkpoint import Checkpointer
+
+
+def crash_and_recover(victim, recovery, stream, num_chunks, crash_after,
+                      every_chunks, key):
+    """Kill ``victim`` after ``crash_after`` chunks; recover ``recovery``.
+
+    ``victim`` and ``recovery`` may be warm (reused across a sweep —
+    restore keeps compiled steps).  ``recovery``'s own PRNG/state is
+    deliberately overwritten by the checkpoint, so constructing it with
+    a different key is encouraged: it proves the snapshot is complete.
+
+    Returns ``(pre_crash_emissions, ckpt, recovered_emissions)``.
+    """
+    victim.reset(key)
+    ck = Checkpointer(every_chunks=every_chunks)
+    victim.checkpointer = ck
+    ck.save(victim)        # bootstrap snapshot at offset 0: a crash
+    #                        before the first cadence point recovers too
+    for e in range(crash_after):
+        victim.push(stream.chunk_at(e))
+    # --- CRASH: only serialized bytes cross this line. ---
+    payload = ck.latest
+    victim.checkpointer = None
+
+    ckpt = ckp.from_bytes(payload, recovery.state)
+    recovery.restore(ckpt)
+    for e in range(ckpt.stream_offset, num_chunks):
+        recovery.push(stream.chunk_at(e))
+    recovered = recovery.finalize()
+    return list(victim.emissions), ckpt, recovered
+
+
+def exactly_once_output(pre_crash, ckpt, recovered):
+    """The deduped output stream a downstream consumer keeps: pre-crash
+    emissions below the checkpoint's answers cursor, then the recovered
+    run's (re-)emissions from that cursor on."""
+    return pre_crash[: ckpt.emissions_done] + recovered
+
+
+def assert_emission_equal(a, b):
+    """Bitwise emission equality (answers, widths, accounting, capacity)
+    — everything except wall-clock latency."""
+    assert a.index == b.index, (a.index, b.index)
+    assert set(a.results) == set(b.results)
+    for name in a.results:
+        ra, rb = a.results[name], b.results[name]
+        if hasattr(ra, "keys"):            # HeavyHitters
+            np.testing.assert_array_equal(
+                np.asarray(ra.keys), np.asarray(rb.keys), err_msg=name)
+            np.testing.assert_array_equal(
+                np.asarray(ra.estimate.value),
+                np.asarray(rb.estimate.value), err_msg=name)
+            np.testing.assert_array_equal(
+                np.asarray(ra.estimate.variance),
+                np.asarray(rb.estimate.variance), err_msg=name)
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(ra.value), np.asarray(rb.value), err_msg=name)
+            np.testing.assert_array_equal(
+                np.asarray(ra.variance), np.asarray(rb.variance),
+                err_msg=name)
+            # The Eq. 5–9 widths, not just the variances they derive from.
+            np.testing.assert_array_equal(
+                np.asarray(ra.error_bound(0.95)),
+                np.asarray(rb.error_bound(0.95)), err_msg=name)
+    assert a.watermark == b.watermark
+    assert a.open_interval == b.open_interval
+    assert (a.on_time, a.late, a.dropped) == (b.on_time, b.late, b.dropped)
+    np.testing.assert_array_equal(np.asarray(a.capacity),
+                                  np.asarray(b.capacity))
+    assert a.items == b.items
+
+
+def assert_exactly_once(reference, pre_crash, ckpt, recovered):
+    """The recovered output sequence must equal the uninterrupted run's,
+    emission for emission, with contiguous indices — no loss, no
+    double-count."""
+    combined = exactly_once_output(pre_crash, ckpt, recovered)
+    assert [em.index for em in combined] == list(range(len(reference))), (
+        f"emission indices after recovery: "
+        f"{[em.index for em in combined]} vs {len(reference)} expected")
+    if recovered:
+        assert recovered[0].index == ckpt.emissions_done
+    for a, b in zip(reference, combined):
+        assert_emission_equal(a, b)
+
+
+def sweep_crash_points(make_victim, make_recovery, stream, num_chunks,
+                       crash_points, every_chunks, key,
+                       reference=None):
+    """Kill-after-chunk-k for every k in ``crash_points`` against one
+    uninterrupted reference run; executors are constructed once and
+    reused warm (restore must keep compiled steps)."""
+    victim = make_victim()
+    recovery = make_recovery()
+    if reference is None:
+        victim.reset(key)
+        reference = victim.run(stream.prefix(num_chunks))
+    for k in crash_points:
+        pre, ckpt, rec = crash_and_recover(
+            victim, recovery, stream, num_chunks, k, every_chunks, key)
+        assert ckpt.stream_offset <= k
+        assert_exactly_once(reference, pre, ckpt, rec)
+    return reference, victim, recovery
+
+
+def numpy_watermark_oracle(chunks, span, lateness, num_intervals):
+    """Independent numpy reimplementation of the runtime's arrival
+    accounting; handles ``[M]`` and sharded ``[W, M]`` time leaves (each
+    shard row is its own frontier; totals sum over shards)."""
+    times = [np.asarray(c.times, np.float32) for c in chunks]
+    if times[0].ndim == 2:
+        w = times[0].shape[0]
+        tot = np.zeros(3, np.int64)
+        for s in range(w):
+            tot += np.asarray(_oracle_rows([t[s] for t in times], span,
+                                           lateness, num_intervals))
+        return tuple(int(x) for x in tot)
+    return _oracle_rows(times, span, lateness, num_intervals)
+
+
+def _oracle_rows(times, span, lateness, num_intervals):
+    max_time = -np.inf
+    open_iv = 0
+    on_time = late = dropped = 0
+    for t in times:
+        wmark = np.float32(max_time - lateness)
+        tgt = np.floor(t / np.float32(span)).astype(np.int64)
+        new_open = max(open_iv, int(tgt.max()))
+        oldest = new_open - num_intervals + 1
+        accept = (t >= wmark) & (tgt >= oldest)
+        on_time += int(np.sum(accept & (tgt >= open_iv)))
+        late += int(np.sum(accept & (tgt < open_iv)))
+        dropped += int(np.sum(~accept))
+        max_time = max(max_time, float(t.max()))
+        open_iv = new_open
+    return on_time, late, dropped

@@ -1,0 +1,525 @@
+"""Exactly-once fault tolerance: checkpoint/restore + deterministic
+replay, proven by crash injection.
+
+The crash sweep is the headline: for both executor modes (and the
+sharded path) the executor is killed after chunk k for every k in a
+window, restored from the latest SERIALIZED checkpoint into a different
+executor, and the replayed run must reproduce the uninterrupted run's
+registered answers, Eq. 5–9 widths and watermark accounting bitwise
+(``tests/harness_crash.py`` is the spec).  Around it: replay determinism
+regressions (suffix replay can't drift), watermark accounting vs the
+numpy oracle across a crash, warm-restore/trace-count guarantees, and
+serialization/validation behavior.
+"""
+import jax
+import numpy as np
+import pytest
+
+from harness_crash import (assert_exactly_once, crash_and_recover,
+                           numpy_watermark_oracle, sweep_crash_points)
+from repro.runtime import (BatchedExecutor, Checkpointer,
+                           PipelinedExecutor, QueryRegistry, RuntimeConfig)
+from repro.runtime import checkpoint as ckp
+from repro.runtime import controller as ctl
+from repro.runtime import watermark as wmk
+from repro.runtime.executor import _ingest_chunk
+from repro.stream import (GaussianSource, NetflowSource, ReplayableStream,
+                          StreamAggregator)
+
+MODES = (BatchedExecutor, PipelinedExecutor)
+
+
+def _registry():
+    """Every query kind: recovery must be exact for all of them."""
+    return (QueryRegistry()
+            .register("total", "sum")
+            .register("avg", "mean")
+            .register("big", "count", predicate=lambda x: x > 500.0)
+            .register("hist", "histogram", edges=(0.0, 100.0, 5000.0, 2e4))
+            .register("p", "quantile", qs=(0.5, 0.9), num_replicates=8)
+            .register("top", "heavy_hitters", k=4)
+            .register("nuniq", "distinct", num_replicates=8))
+
+
+def _cfg(**kw):
+    base = dict(num_strata=3, capacity=64, num_intervals=4,
+                interval_span=1.0, allowed_lateness=0.5,
+                batch_chunks=2, emit_every=2)
+    base.update(kw)
+    return RuntimeConfig(**base)
+
+
+def _stream(num_chunks=8, chunk_size=128, seed=3, **kw):
+    # rate such that the stream spans 4 intervals (all stay live).
+    rate = chunk_size * num_chunks / 4.0
+    return ReplayableStream(StreamAggregator(GaussianSource(), seed=seed),
+                            chunk_size=chunk_size, rate=rate, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Crash-injection property sweep (the tentpole's acceptance test).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", MODES, ids=lambda m: m.mode)
+def test_crash_sweep_every_chunk_bitwise(make, key):
+    """Kill after chunk k for EVERY k in the stream; recovery must be
+    bitwise-identical to the uninterrupted run at every crash point.
+    Checkpoint cadence 3 is deliberately coprime to the emission cadence
+    2, so restores land mid-emission-period and mid-micro-batch."""
+    n = 8
+    stream = _stream(num_chunks=n)
+    cfg, reg = _cfg(), _registry()
+    sweep_crash_points(
+        make_victim=lambda: make(cfg, reg, key),
+        make_recovery=lambda: make(cfg, reg, jax.random.PRNGKey(999)),
+        stream=stream, num_chunks=n, crash_points=range(1, n),
+        every_chunks=3, key=key)
+
+
+@pytest.mark.parametrize("make", MODES, ids=lambda m: m.mode)
+def test_crash_sweep_with_adaptive_controller(make, key):
+    """With an accuracy budget the controller's capacity actually MOVES
+    (asserted — otherwise the sweep's bitwise capacity check is
+    vacuous), so restoring ControllerState wrong would change adopted
+    interval capacities, reservoir contents and widths.  Accuracy
+    feedback is deterministic (no wall-clock), so recovery must still
+    be bitwise."""
+    from repro.core import adaptive
+    from repro.runtime import ControllerConfig
+    n = 8
+    stream = _stream(num_chunks=n, chunk_size=256, seed=8)
+    cfg = _cfg(capacity=16, accuracy_query="avg",
+               controller=ControllerConfig(
+                   budget=adaptive.accuracy_budget(0.05,
+                                                   max_per_stratum=512)))
+    reg = _registry()
+    reference, _, _ = sweep_crash_points(
+        make_victim=lambda: make(cfg, reg, key),
+        make_recovery=lambda: make(cfg, reg, jax.random.PRNGKey(999)),
+        stream=stream, num_chunks=n, crash_points=(1, 3, 4, 6, 7),
+        every_chunks=3, key=key)
+    caps = np.stack([np.asarray(em.capacity) for em in reference])
+    assert int(caps.max()) > 16          # feedback really reallocated
+
+
+@pytest.mark.parametrize("make", MODES, ids=lambda m: m.mode)
+def test_crash_sweep_sharded(make, key):
+    """Same property with num_shards > 1: per-shard reservoirs,
+    watermarks and controllers all restore from one checkpoint."""
+    n = 8
+    stream = ReplayableStream(
+        StreamAggregator(GaussianSource(), seed=5),
+        chunk_size=64, rate=64 / 0.5, num_shards=2)
+    cfg = _cfg(num_shards=2, capacity=64, interval_span=0.5,
+               allowed_lateness=0.25)
+    reg = _registry()
+    sweep_crash_points(
+        make_victim=lambda: make(cfg, reg, key),
+        make_recovery=lambda: make(cfg, reg, jax.random.PRNGKey(999)),
+        stream=stream, num_chunks=n, crash_points=(1, 2, 3, 5, 7),
+        every_chunks=2, key=key)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("make", MODES, ids=lambda m: m.mode)
+def test_soak_crash_with_late_arrivals_crossing_crash_point(make, key):
+    """Out-of-order soak: bounded disorder larger than the lateness
+    budget, so the stream exercises on-time AND late AND dropped — and
+    late arrivals land in intervals snapshotted before the crash.  Every
+    sampled crash point must still recover bitwise, and the full-stream
+    accounting must match the numpy oracle."""
+    n, chunk = 48, 256
+    stream = _stream(num_chunks=n, chunk_size=chunk, seed=7,
+                     disorder=0.35, disorder_seed=9)
+    # span = chunk/rate = 4/48 time units << disorder: late items cross
+    # chunk (and crash) boundaries.
+    cfg = _cfg(capacity=128, allowed_lateness=0.3, batch_chunks=6,
+               emit_every=6)
+    reg = (QueryRegistry().register("total", "sum").register("avg", "mean")
+           .register("p", "quantile", qs=(0.5, 0.9), num_replicates=8))
+    reference, victim, recovery = sweep_crash_points(
+        make_victim=lambda: make(cfg, reg, key),
+        make_recovery=lambda: make(cfg, reg, jax.random.PRNGKey(999)),
+        stream=stream, num_chunks=n, crash_points=range(2, n, 5),
+        every_chunks=5, key=key)
+
+    final = reference[-1]
+    assert final.on_time > 0 and final.late > 0 and final.dropped > 0
+    assert final.on_time + final.late + final.dropped == n * chunk
+    oracle = numpy_watermark_oracle(stream.prefix(n), cfg.interval_span,
+                                    cfg.allowed_lateness, cfg.num_intervals)
+    assert (final.on_time, final.late, final.dropped) == oracle
+
+    # Late arrivals must actually CROSS a crash point: pick a crash with
+    # a checkpoint strictly inside the stream and show the recovered run
+    # keeps counting late items on top of the snapshotted counter.
+    pre, ckpt, rec = crash_and_recover(victim, recovery, stream, n,
+                                       crash_after=26, every_chunks=5,
+                                       key=key)
+    snap_late = ckp.manifest(ckpt)["watermark"]["late"]
+    # (Batched checkpoints snap to the last flush boundary, so the
+    # offset is <= the cadence point; either way it's mid-stream.)
+    assert 20 <= ckpt.stream_offset <= 25 and snap_late > 0
+    assert rec[-1].late > snap_late
+    assert_exactly_once(reference, pre, ckpt, rec)
+
+
+# ---------------------------------------------------------------------------
+# Determinism regressions: replay + sources (suffix replay can't drift).
+# ---------------------------------------------------------------------------
+
+def _assert_chunks_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.values), np.asarray(b.values))
+    np.testing.assert_array_equal(np.asarray(a.stratum_ids),
+                                  np.asarray(b.stratum_ids))
+    np.testing.assert_array_equal(np.asarray(a.times), np.asarray(b.times))
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+
+
+def test_replay_same_offset_same_chunks_across_fresh_state():
+    """Two independently constructed streams (fresh PRNG construction —
+    a new process's worth of state) agree bitwise at every offset, for
+    plain, sharded and disordered variants."""
+    variants = (dict(), dict(num_shards=2, chunk_size=64),
+                dict(disorder=0.4, disorder_seed=11))
+    for kw in variants:
+        a = _stream(seed=21, **kw)
+        b = _stream(seed=21, **kw)
+        for e in (0, 3, 7):
+            _assert_chunks_equal(a.chunk_at(e), b.chunk_at(e))
+
+
+def test_replay_suffix_equals_full_run():
+    """range(k, n) must regenerate exactly the tail of prefix(n) — the
+    recovery path replays a suffix, never the full stream."""
+    for kw in (dict(), dict(disorder=0.35, disorder_seed=9)):
+        s = _stream(seed=22, **kw)
+        full = s.prefix(8)
+        for k in (1, 4, 6):
+            for e, c in zip(range(k, 8), s.range(k, 8)):
+                _assert_chunks_equal(full[e], c)
+
+
+def test_source_chunks_deterministic_across_fresh_keys():
+    """sources.py determinism: a freshly constructed key + source must
+    regenerate the same records (what makes rewind possible at all)."""
+    for src in (GaussianSource(), NetflowSource()):
+        a = src.chunk(jax.random.PRNGKey(42), 128)
+        b = src.chunk(jax.random.PRNGKey(42), 128)
+        np.testing.assert_array_equal(np.asarray(a.values),
+                                      np.asarray(b.values))
+        np.testing.assert_array_equal(np.asarray(a.stratum_ids),
+                                      np.asarray(b.stratum_ids))
+
+
+def test_perturb_offset_addressable(key):
+    """perturb_event_times(offset=k) must equal perturbing the full list
+    and slicing — the disorder injection itself is replayable."""
+    from repro.runtime.records import perturb_event_times
+    s = _stream(seed=23)
+    plain = [s.chunk_at(e) for e in range(6)]
+    full = perturb_event_times(plain, key, 0.3)
+    tail = perturb_event_times(plain[2:], key, 0.3, offset=2)
+    for a, b in zip(full[2:], tail):
+        _assert_chunks_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Watermark accounting across recovery (no double-count, no loss).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("disorder", (0.0, 0.35), ids=("inorder", "ooo"))
+def test_watermark_counters_after_recovery_match_oracle(disorder, key):
+    n, chunk = 12, 128
+    stream = ReplayableStream(
+        StreamAggregator(GaussianSource(), seed=13),
+        chunk_size=chunk, rate=chunk / 0.25,   # span 0.25 < disorder
+        disorder=disorder, disorder_seed=4)
+    cfg = _cfg(allowed_lateness=0.3)
+    reg = QueryRegistry().register("total", "sum")
+    victim = PipelinedExecutor(cfg, reg, key)
+    recovery = PipelinedExecutor(cfg, reg, jax.random.PRNGKey(1))
+    pre, ckpt, rec = crash_and_recover(victim, recovery, stream, n,
+                                       crash_after=7, every_chunks=3,
+                                       key=key)
+    oracle = numpy_watermark_oracle(stream.prefix(n), cfg.interval_span,
+                                    cfg.allowed_lateness, cfg.num_intervals)
+    final = rec[-1]
+    assert (final.on_time, final.late, final.dropped) == oracle
+    assert final.on_time + final.late + final.dropped == n * chunk
+    if disorder:
+        assert final.late > 0 and final.dropped > 0
+
+
+def test_watermark_counters_after_recovery_sharded(key):
+    n, w, per_shard = 8, 2, 64
+    stream = ReplayableStream(StreamAggregator(GaussianSource(), seed=5),
+                              chunk_size=per_shard, rate=per_shard / 0.5,
+                              num_shards=w)
+    cfg = _cfg(num_shards=w, interval_span=0.5, allowed_lateness=0.25)
+    reg = QueryRegistry().register("total", "sum")
+    victim = BatchedExecutor(cfg, reg, key)
+    recovery = BatchedExecutor(cfg, reg, jax.random.PRNGKey(1))
+    _, _, rec = crash_and_recover(victim, recovery, stream, n,
+                                  crash_after=5, every_chunks=2, key=key)
+    oracle = numpy_watermark_oracle(stream.prefix(n), cfg.interval_span,
+                                    cfg.allowed_lateness, cfg.num_intervals)
+    final = rec[-1]
+    assert (final.on_time, final.late, final.dropped) == oracle
+    assert final.on_time + final.late + final.dropped == n * w * per_shard
+
+
+# ---------------------------------------------------------------------------
+# reset() vs restore(): compiled steps stay warm, cursors stay sane.
+# ---------------------------------------------------------------------------
+
+def test_restore_keeps_pipelined_step_warm(key):
+    """Restore must NOT retrace the hot step: one trace for warmup,
+    crash recovery and a full sweep of restores combined."""
+    n = 8
+    stream = _stream(num_chunks=n, seed=31)
+    cfg, reg = _cfg(), _registry()
+    victim = PipelinedExecutor(cfg, reg, key)
+    recovery = PipelinedExecutor(cfg, reg, jax.random.PRNGKey(9))
+    for k in (1, 4, 6):
+        crash_and_recover(victim, recovery, stream, n, k, 3, key)
+    assert victim.trace_count == 1
+    assert recovery.trace_count == 1
+
+
+def test_restore_keeps_batched_step_cache_warm(key):
+    """The batched window step is AOT-compiled per micro-batch size;
+    restore + aligned replay must reuse the cache, not grow it."""
+    n = 8
+    stream = _stream(num_chunks=n, seed=32)
+    cfg, reg = _cfg(), _registry()
+    victim = BatchedExecutor(cfg, reg, key)
+    recovery = BatchedExecutor(cfg, reg, jax.random.PRNGKey(9))
+    victim.reset(key)
+    victim.run(stream.prefix(n))
+    sizes = set(victim._step_cache)
+    for k in (2, 5, 7):
+        crash_and_recover(victim, recovery, stream, n, k, 3, key)
+    assert set(victim._step_cache) == sizes
+    assert set(recovery._step_cache) <= sizes
+
+
+def test_reset_after_restore_reproduces_fresh_run(key):
+    """reset() on a restored executor must return to a genuinely fresh
+    stream: zeroed cursors, initial state, same answers as a brand-new
+    executor."""
+    n = 8
+    stream = _stream(num_chunks=n, seed=33)
+    cfg, reg = _cfg(), _registry()
+    ex = PipelinedExecutor(cfg, reg, jax.random.PRNGKey(5))
+    ex.run(stream.prefix(4))
+    payload = ckp.to_bytes(ex.snapshot())
+    ex.restore(payload)
+    list(map(ex.push, stream.range(4, n)))
+    ex.finalize()
+    ex.reset(key)                     # back to a FRESH run
+    assert ex.chunks_pushed == 0 and ex._emission_cursor == 0
+    warm = ex.run(stream.prefix(n))
+    fresh = PipelinedExecutor(cfg, reg, key).run(stream.prefix(n))
+    assert ex.trace_count == 1
+    assert [em.index for em in warm] == [em.index for em in fresh]
+    for a, b in zip(warm, fresh):
+        np.testing.assert_array_equal(
+            np.asarray(a.results["total"].value),
+            np.asarray(b.results["total"].value))
+
+
+def test_recovered_emission_indices_continue_cursor(key):
+    """The registry answers cursor: the first emission after restore
+    carries index == emissions_done (NOT 0), so re-emissions dedupe."""
+    n = 8
+    stream = _stream(num_chunks=n, seed=34)
+    cfg = _cfg(emit_every=2, batch_chunks=2)
+    reg = QueryRegistry().register("total", "sum")
+    victim = PipelinedExecutor(cfg, reg, key)
+    recovery = PipelinedExecutor(cfg, reg, jax.random.PRNGKey(2))
+    _, ckpt, rec = crash_and_recover(victim, recovery, stream, n,
+                                     crash_after=7, every_chunks=6, key=key)
+    assert ckpt.emissions_done == 3          # ckpt at offset 6 = 3 emissions
+    assert [em.index for em in rec] == [3]   # continues, doesn't restart
+
+
+def test_pipelined_hot_loop_sync_free_with_checkpointing(key):
+    """PR 2's hot-path contract survives checkpointing: trace count 1
+    with a cadence checkpointer attached, and the ingest jaxpr stays
+    free of callbacks/collectives (snapshots live OUTSIDE the step)."""
+    cfg = _cfg(capacity=64, emit_every=10_000)
+    stream = _stream(num_chunks=12, chunk_size=64, seed=35)
+    ck = Checkpointer(every_chunks=2)
+    ex = PipelinedExecutor(cfg, _registry(), key, checkpointer=ck)
+    for c in stream.prefix(12):
+        ex.push(c)
+    assert ex.trace_count == 1, \
+        f"checkpointing retraced the hot step {ex.trace_count}x"
+    assert len(ck.saved) >= 1 and ck.latest_offset == 12
+    jaxpr = str(jax.make_jaxpr(
+        lambda st, c: _ingest_chunk(cfg, st, c))(ex.state,
+                                                 stream.chunk_at(0)))
+    for prim in ("callback", "psum", "all_gather", "all_reduce",
+                 "infeed", "outfeed"):
+        assert prim not in jaxpr, f"{prim} in hot loop with checkpointing!"
+
+
+# ---------------------------------------------------------------------------
+# Serialization, manifest, validation, cadence.
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_bytes_roundtrip_and_manifest(key):
+    n = 6
+    stream = _stream(num_chunks=n, seed=41)
+    ex = PipelinedExecutor(_cfg(), _registry(), key)
+    for c in stream.prefix(n):
+        ex.push(c)
+    ckpt = ex.snapshot()
+    payload = ckp.to_bytes(ckpt)
+    back = ckp.from_bytes(payload, ex.state)
+    assert (back.mode, back.stream_offset, back.emissions_done) == \
+        ("pipelined", n, ckpt.emissions_done)
+    for a, b in zip(jax.tree_util.tree_leaves(ckpt.state),
+                    jax.tree_util.tree_leaves(back.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # The header manifest is self-describing and matches the state.
+    head = ckp.peek(payload)
+    assert head["format"] == ckp.FORMAT and head["mode"] == "pipelined"
+    wm = wmk.from_export(head["manifest"]["watermark"])
+    np.testing.assert_array_equal(np.asarray(wm.on_time),
+                                  np.asarray(ex.state.wm.on_time))
+    cs = ctl.from_export(head["manifest"]["controller"])
+    np.testing.assert_array_equal(np.asarray(cs.capacity),
+                                  np.asarray(ex.state.ctrl.capacity))
+
+
+def test_checkpoint_file_roundtrip(tmp_path, key):
+    stream = _stream(num_chunks=4, seed=42)
+    ex = PipelinedExecutor(_cfg(), _registry(), key)
+    for c in stream.prefix(4):
+        ex.push(c)
+    path = str(tmp_path / "ckpt.npz")
+    ckp.save(ex.snapshot(), path)
+    back = ckp.load(path, ex.state)
+    assert back.stream_offset == 4
+    np.testing.assert_array_equal(
+        np.asarray(back.state.wm.on_time), np.asarray(ex.state.wm.on_time))
+
+
+def test_restore_rejects_mode_and_shape_mismatch(key):
+    reg = _registry()
+    stream = _stream(num_chunks=4, seed=43)
+    b = BatchedExecutor(_cfg(), reg, key)
+    for c in stream.prefix(4):
+        b.push(c)
+    snap = b.snapshot()
+    p = PipelinedExecutor(_cfg(), reg, key)
+    with pytest.raises(ValueError, match="batched"):
+        p.restore(snap)
+    # Different reservoir allocation → named-leaf shape error.
+    other = BatchedExecutor(_cfg(capacity=32), reg, key)
+    with pytest.raises(ValueError, match="shape"):
+        other.restore(snap)
+    # Different ring size → semantic-fingerprint error.
+    other2 = BatchedExecutor(_cfg(num_intervals=8), reg, key)
+    with pytest.raises(ValueError, match="num_intervals"):
+        other2.restore(snap)
+    # SHAPE-INVISIBLE config drift (same arrays, different event-time
+    # semantics) must be refused too — replay would mis-route silently.
+    other3 = BatchedExecutor(_cfg(interval_span=0.5), reg, key)
+    with pytest.raises(ValueError, match="interval_span"):
+        other3.restore(snap)
+    other4 = BatchedExecutor(_cfg(allowed_lateness=0.1), reg, key)
+    with pytest.raises(ValueError, match="allowed_lateness"):
+        other4.restore(snap)
+    # Emission-schedule and query-set drift are answer-stream semantics:
+    # the same Emission.index would cover different windows / different
+    # questions, so they are refused too.
+    other5 = BatchedExecutor(_cfg(emit_every=4), reg, key)
+    with pytest.raises(ValueError, match="emit_every"):
+        other5.restore(snap)
+    other6 = BatchedExecutor(_cfg(),
+                             QueryRegistry().register("total", "sum"), key)
+    with pytest.raises(ValueError, match="queries"):
+        other6.restore(snap)
+    # Same names/kinds but different answer-shaping params is a
+    # DIFFERENT question set — refused too.
+    reg_qs = (QueryRegistry()
+              .register("total", "sum")
+              .register("avg", "mean")
+              .register("big", "count", predicate=lambda x: x > 500.0)
+              .register("hist", "histogram",
+                        edges=(0.0, 100.0, 5000.0, 2e4))
+              .register("p", "quantile", qs=(0.25, 0.75),   # was .5/.9
+                        num_replicates=8)
+              .register("top", "heavy_hitters", k=4)
+              .register("nuniq", "distinct", num_replicates=8))
+    other6b = BatchedExecutor(_cfg(), reg_qs, key)
+    with pytest.raises(ValueError, match="queries"):
+        other6b.restore(snap)
+    # Controller-feedback drift is deterministic state evolution —
+    # restoring across a different accuracy target or feedback query
+    # would diverge bitwise under the same indices, so it's refused.
+    from repro.core import adaptive
+    from repro.runtime import ControllerConfig
+    other7 = BatchedExecutor(_cfg(accuracy_query="total"), reg, key)
+    with pytest.raises(ValueError, match="accuracy_query"):
+        other7.restore(snap)
+    other8 = BatchedExecutor(
+        _cfg(controller=ControllerConfig(
+            budget=adaptive.accuracy_budget(0.5, max_per_stratum=64))),
+        reg, key)
+    with pytest.raises(ValueError, match="controller"):
+        other8.restore(snap)
+    # Serialized payloads validate as well.
+    with pytest.raises(ValueError, match="shape"):
+        ckp.from_bytes(ckp.to_bytes(snap), other.state)
+
+
+def test_checkpointer_cadence_retention_and_flush_snap(key):
+    stream = _stream(num_chunks=8, seed=44)
+    reg = QueryRegistry().register("total", "sum")
+    # Pipelined: a snapshot lands every `every_chunks` pushes.
+    ck = Checkpointer(every_chunks=2, keep=None)
+    ex = PipelinedExecutor(_cfg(), reg, key, checkpointer=ck)
+    for c in stream.prefix(8):
+        ex.push(c)
+    assert [off for off, _ in ck.saved] == [2, 4, 6, 8]
+    # Batched with batch_chunks=4: cadence points between flushes snap
+    # back to the last flush boundary (and dedupe instead of repeating).
+    ck2 = Checkpointer(every_chunks=2, keep=2)
+    ex2 = BatchedExecutor(_cfg(batch_chunks=4), reg, key, checkpointer=ck2)
+    for c in stream.prefix(8):
+        ex2.push(c)
+    assert [off for off, _ in ck2.saved] == [4, 8]    # keep=2 of [0?,4,8]
+    with pytest.raises(ValueError, match="every_chunks"):
+        Checkpointer(every_chunks=0)
+    with pytest.raises(ValueError, match="keep"):
+        Checkpointer(every_chunks=1, keep=0)
+
+
+def test_reset_clears_checkpointer_retention(key):
+    """A checkpointer reused across reset() must never serve the OLD
+    run's payload: reset clears retention, and the new run's snapshot
+    at the same offset is a genuinely new payload."""
+    reg = QueryRegistry().register("total", "sum")
+    ck = Checkpointer(every_chunks=4)
+    ex = PipelinedExecutor(_cfg(), reg, key, checkpointer=ck)
+    stream_a = _stream(num_chunks=4, seed=51)
+    for c in stream_a.prefix(4):
+        ex.push(c)
+    payload_a = ck.latest
+    assert ck.latest_offset == 4
+    ex.reset(jax.random.fold_in(key, 1))          # NEW stream
+    assert ck.latest is None                      # old run not recoverable
+    stream_b = _stream(num_chunks=4, seed=52)
+    for c in stream_b.prefix(4):
+        ex.push(c)
+    assert ck.latest_offset == 4 and ck.latest != payload_a
+    # The retained payload recovers run B, not run A.
+    rec = PipelinedExecutor(_cfg(), reg, jax.random.PRNGKey(3))
+    rec.restore(ck.latest)
+    np.testing.assert_array_equal(
+        np.asarray(rec.state.window.intervals.counts),
+        np.asarray(ex.state.window.intervals.counts))
