@@ -2,14 +2,60 @@
 Pallas interpret path (correctness-grade on CPU; TPU is the target)."""
 from __future__ import annotations
 
+import functools
+import time
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, param, time_call
 from repro.core import oasrs, query
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 SPEC = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def _bench_reservoir_fold(rows):
+    """The ingest hot-path kernel: Pallas ``reservoir_fold`` vs the numpy
+    Algorithm-1 oracle vs the pure-jnp chunk fold — all three consume the
+    SAME pre-drawn uniforms, so outputs are bit-identical and only the
+    execution strategy is measured."""
+    m, s, n = param(16_384, 2048), 32, 64
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sid = jax.random.randint(k1, (m,), 0, s)
+    pay = jax.random.normal(k2, (m,))
+    ua = jax.random.uniform(k3, (m,))
+    us = jax.random.uniform(k4, (m,))
+    mask = jnp.ones((m,), jnp.bool_)
+    st0 = oasrs.init(s, n, SPEC, key)
+
+    fold_jnp = jax.jit(oasrs.apply_chunk_uniforms)
+    us_jnp = time_call(fold_jnp, st0, sid, pay, mask, ua, us,
+                       warmup=1, iters=5)
+    rows.append(emit("kernel.reservoir_fold.jnp", us_jnp,
+                     f"items_per_sec={m / (us_jnp / 1e6):.0f}"))
+
+    # Numpy oracle: the literal sequential loop (one timed pass).
+    m_ref = param(16_384, 2048)
+    t0 = time.perf_counter()
+    ref.reservoir_fold_ref(sid[:m_ref], pay[:m_ref], ua[:m_ref],
+                           us[:m_ref], mask[:m_ref], st0.counts,
+                           st0.capacity, st0.values)
+    us_ref = (time.perf_counter() - t0) * 1e6
+    rows.append(emit("kernel.reservoir_fold.ref", us_ref,
+                     f"items_per_sec={m_ref / (us_ref / 1e6):.0f}"))
+
+    # Pallas interpret mode — correctness path only on CPU; note derived.
+    from repro.kernels.reservoir import reservoir_fold
+    m_pl = param(2048, 512)
+    fold_pl = functools.partial(reservoir_fold, block_m=512,
+                                interpret=True)
+    us_pl = time_call(fold_pl, sid[:m_pl], pay[:m_pl], ua[:m_pl],
+                      us[:m_pl], mask[:m_pl], st0.counts, st0.capacity,
+                      st0.values, warmup=1, iters=3)
+    rows.append(emit("kernel.reservoir_fold.pallas_interpret", us_pl,
+                     "interpret_mode=1 (TPU lowering is the target)"))
 
 
 def run() -> list:
@@ -44,6 +90,8 @@ def run() -> list:
         warmup=1, iters=3)
     rows.append(emit("kernel.stratum_moments.pallas_interpret", us,
                      "interpret_mode=1 (TPU lowering is the target)"))
+
+    _bench_reservoir_fold(rows)
     return rows
 
 

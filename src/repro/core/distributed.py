@@ -30,6 +30,9 @@ import jax.numpy as jnp
 
 from repro.core import error as err
 from repro.core import oasrs
+from repro.core import quantile as qt
+from repro.core import sketches as sk
+from repro.kernels import ops
 
 AxisNames = Union[str, Sequence[str]]
 
@@ -39,13 +42,17 @@ def _psum(x, axis_names: AxisNames):
 
 
 def local_update(state: oasrs.OASRSState, stratum_ids: jax.Array,
-                 payload, mask=None) -> oasrs.OASRSState:
+                 payload, mask=None,
+                 backend: Optional[str] = None) -> oasrs.OASRSState:
     """Per-shard ingestion — intentionally just the local chunk fold.
 
     Named separately to make the no-collective property a grep-able,
-    testable contract of the module.
+    testable contract of the module. ``backend`` selects the fold
+    implementation (``"jnp"`` | ``"pallas"`` | ``None`` = auto, Pallas
+    on TPU); all backends are bitwise-identical.
     """
-    return oasrs.update_chunk(state, stratum_ids, payload, mask)
+    return oasrs.update_chunk(state, stratum_ids, payload, mask,
+                              backend=backend)
 
 
 def global_sum(local_stats: err.StratumStats, axis_names: AxisNames,
@@ -110,7 +117,6 @@ def global_histogram(view, edges: jax.Array, axis_names: AxisNames,
     each (shard × stratum) cell is an independently-sampled stratum, so
     the per-bin values and Eq. 6 variances both sum exactly (Eq. 5).
     """
-    from repro.core import quantile as qt
     local = qt.cell_counts(view, edges, use_pallas=use_pallas)
     return _merge_partials(local, axis_names, alive)
 
@@ -124,7 +130,6 @@ def global_key_counts(view, keys: jax.Array, axis_names: AxisNames,
     per-key frequency is a linear query, so values and variances merge
     with one psum.
     """
-    from repro.core import sketches as sk
     local = sk.key_counts(view, keys)
     return _merge_partials(local, axis_names, alive)
 
@@ -147,8 +152,6 @@ def global_quantile(view, qs, value_range, axis_names,
     ``below``/``total``, and targets beyond the bracket clamp to its
     edges. Resolution is ``(hi − lo) / num_bins``.
     """
-    from repro.core import quantile as qt
-    from repro.kernels import ops
     qs = jnp.atleast_1d(jnp.asarray(qs, jnp.float32))
     lo, hi = value_range
     edges = lo + (hi - lo) * jnp.linspace(0.0, 1.0, num_bins + 1)

@@ -10,6 +10,9 @@ stream-processing models:
   (``N_i / c`` for the item with running stratum count ``c``), realized by
   ranking items within their stratum inside the chunk. Slot collisions are
   resolved *last-write-wins*, identical to processing the chunk item by item.
+  Two bitwise-interchangeable backends: the pure-jnp rank/scatter fold and
+  the ``kernels/reservoir.py`` Pallas kernel (``backend="pallas"``, the
+  TPU default) — both consume the same per-chunk uniform draws.
 * ``update_stream``  — *pipelined* model (Flink): a ``lax.scan`` folding one
   item (or one small vector lane) at a time, i.e. Algorithm 1 of the paper
   applied per stratum.
@@ -27,6 +30,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import reservoir as _rk
 from repro.utils import (Pytree, bincount, dataclass_pytree,
                          rank_within_stratum, tree_leading_dim)
 
@@ -123,45 +127,65 @@ def reset_window(state: OASRSState) -> OASRSState:
 # Batched-model ingestion (Spark-Streaming analog).
 # ---------------------------------------------------------------------------
 
-def update_chunk(
+def default_backend() -> str:
+    """Chunk-fold backend when the caller passes ``backend=None``: the
+    Pallas kernel on TPU when it actually lowers
+    (``REPRO_PALLAS_COMPILE=1``), the pure-jnp fold everywhere else —
+    the interpret-mode kernel must never land in the hot path by
+    default."""
+    if jax.default_backend() == "tpu" and not _rk.default_interpret():
+        return "pallas"
+    return "jnp"
+
+
+def _pallas_eligible(state: OASRSState, payload: Pytree) -> bool:
+    """The reservoir kernel handles the scalar-payload layout only:
+    a single ``[M]`` payload leaf folding into ``[S, N_max]`` values."""
+    return (isinstance(payload, jax.Array) and payload.ndim == 1
+            and isinstance(state.values, jax.Array)
+            and state.values.ndim == 2)
+
+
+def apply_chunk_uniforms(
     state: OASRSState,
     stratum_ids: jax.Array,
     payload: Pytree,
-    mask: Optional[jax.Array] = None,
+    mask: jax.Array,
+    u_accept: jax.Array,
+    u_slot: jax.Array,
 ) -> OASRSState:
-    """Fold a micro-batch of ``M`` items into the reservoirs.
+    """The pure chunk fold given pre-drawn uniforms (key handling is the
+    caller's job — the returned state carries ``state.key`` unchanged).
 
-    Exact sequential semantics: item ``j`` of stratum ``s`` is the
-    ``counts[s] + rank_j + 1``-th arrival of that stratum, is accepted with
-    the Vitter probability, and later chunk items overwrite earlier ones on
-    slot collision (last-write-wins).
-
-    Args:
-      stratum_ids: ``[M]`` int32 in ``[0, S)``.
-      payload: pytree of ``[M, ...]`` leaves.
-      mask: optional ``[M]`` bool; ``False`` items are ignored (used for
-        ragged tails and for straggler-dropped lanes).
+    Bit-identical to folding the chunk item-at-a-time through Algorithm 1
+    with the same uniforms (``kernels/ref.reservoir_fold_ref`` is the
+    oracle): item ``j`` of stratum ``s`` is the ``counts[s] + rank_j +
+    1``-th arrival of that stratum, is accepted with the Vitter
+    probability, and later chunk items overwrite earlier ones on slot
+    collision (last-write-wins). Exposed separately so callers that fan
+    one chunk across several masked folds (the legacy ring-ingest
+    reference path) can share ONE uniform draw with the fused fold.
     """
     m = stratum_ids.shape[0]
     s_cnt = state.num_strata
     n_max = state.max_capacity
 
-    if mask is None:
-        mask = jnp.ones((m,), jnp.bool_)
     # Invalid items are routed to a sentinel stratum S (never queried).
     sid = jnp.where(mask, stratum_ids, s_cnt).astype(jnp.int32)
 
-    key, k_u, k_slot = jax.random.split(state.key, 3)
     occ = rank_within_stratum(sid)                       # rank inside chunk
     c = state.counts[jnp.minimum(sid, s_cnt - 1)] + occ + 1  # arrival index
     cap = state.capacity[jnp.minimum(sid, s_cnt - 1)]
 
-    u = jax.random.uniform(k_u, (m,))
-    rand_slot = jax.random.randint(
-        k_slot, (m,), 0, jnp.maximum(cap, 1), dtype=jnp.int32)
+    # Replacement slot = floor(u·N_i), exactly the kernel's arithmetic, so
+    # the jnp and Pallas backends are bitwise-interchangeable.
+    rand_slot = jnp.clip(
+        jnp.floor(u_slot * cap.astype(u_slot.dtype)).astype(jnp.int32),
+        0, jnp.maximum(cap - 1, 0))
 
     filling = c <= cap
-    accept_replace = u * c.astype(u.dtype) < cap.astype(u.dtype)
+    accept_replace = u_accept * c.astype(u_accept.dtype) < \
+        cap.astype(u_accept.dtype)
     accept = mask & (filling | accept_replace)
     slot = jnp.where(filling, c - 1, rand_slot)
 
@@ -187,7 +211,65 @@ def update_chunk(
     counts = state.counts + bincount(
         jnp.where(mask, sid, s_cnt), s_cnt + 1)[:s_cnt]
     return OASRSState(values=values, counts=counts,
-                      capacity=state.capacity, key=key)
+                      capacity=state.capacity, key=state.key)
+
+
+def update_chunk(
+    state: OASRSState,
+    stratum_ids: jax.Array,
+    payload: Pytree,
+    mask: Optional[jax.Array] = None,
+    backend: Optional[str] = None,
+    block_m: int = 512,
+) -> OASRSState:
+    """Fold a micro-batch of ``M`` items into the reservoirs.
+
+    Exact sequential semantics (see :func:`apply_chunk_uniforms`); the
+    PRNG key is split once per chunk and both uniform vectors (acceptance
+    + replacement slot) are drawn up front, so every backend consumes the
+    identical random stream.
+
+    Args:
+      stratum_ids: ``[M]`` int32 in ``[0, S)``.
+      payload: pytree of ``[M, ...]`` leaves.
+      mask: optional ``[M]`` bool; ``False`` items are ignored (used for
+        ragged tails and for straggler-dropped lanes).
+      backend: ``"jnp"`` (vectorized rank/scatter fold), ``"pallas"``
+        (the ``kernels/reservoir.py`` hot-path kernel — scalar payloads
+        only, VMEM-resident reservoirs across item tiles), or ``None``
+        to pick :func:`default_backend` (Pallas on TPU, jnp elsewhere).
+        Both backends are bitwise-identical given the same state.
+      block_m: item-tile size for the Pallas backend.
+    """
+    m = stratum_ids.shape[0]
+    if mask is None:
+        mask = jnp.ones((m,), jnp.bool_)
+
+    key, k_u, k_slot = jax.random.split(state.key, 3)
+    u_accept = jax.random.uniform(k_u, (m,))
+    u_slot = jax.random.uniform(k_slot, (m,))
+
+    if backend is None or backend == "auto":
+        backend = default_backend() if _pallas_eligible(state, payload) \
+            else "jnp"
+    if backend == "pallas":
+        if not _pallas_eligible(state, payload):
+            raise ValueError(
+                "backend='pallas' needs a single scalar payload leaf "
+                "([M] items into [S, N_max] reservoirs); got payload "
+                f"{jax.tree_util.tree_structure(payload)}")
+        new_values, new_counts = _rk.reservoir_fold(
+            stratum_ids.astype(jnp.int32), payload, u_accept, u_slot,
+            mask, state.counts, state.capacity, state.values,
+            block_m=block_m, interpret=_rk.default_interpret())
+        return OASRSState(values=new_values, counts=new_counts,
+                          capacity=state.capacity, key=key)
+    if backend != "jnp":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'jnp', 'pallas' or None")
+    out = apply_chunk_uniforms(state, stratum_ids, payload, mask,
+                               u_accept, u_slot)
+    return dataclasses.replace(out, key=key)
 
 
 # ---------------------------------------------------------------------------

@@ -8,21 +8,19 @@ interpreter would be slow).
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import oasrs
 from repro.core.oasrs import OASRSState
 from repro.kernels import ref
-from repro.kernels.reservoir import reservoir_fold
+from repro.kernels.reservoir import default_interpret, reservoir_fold
 from repro.kernels.stratified_stats import stratified_stats
 from repro.kernels.weighted_hist import weighted_hist
 
-
-def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+_interpret = default_interpret     # single source of truth (reservoir.py)
 
 
 def stratum_moments(values: jax.Array, stratum_ids: jax.Array,
@@ -62,19 +60,9 @@ def oasrs_fold(state: OASRSState, stratum_ids: jax.Array,
                block_m: int = 512) -> OASRSState:
     """Kernel-backed OASRS chunk fold for scalar payloads.
 
-    Equivalent in distribution to :func:`repro.core.oasrs.update_chunk`
-    (bit-equal to the Algorithm-1 oracle given the same uniforms).
+    Thin alias of ``oasrs.update_chunk(backend="pallas")`` — bitwise
+    equal to the jnp backend (both consume the same uniform draws) and
+    to the Algorithm-1 oracle given the same uniforms.
     """
-    import dataclasses
-    m = stratum_ids.shape[0]
-    if mask is None:
-        mask = jnp.ones((m,), jnp.bool_)
-    key, k_u, k_slot = jax.random.split(state.key, 3)
-    u_accept = jax.random.uniform(k_u, (m,))
-    u_slot = jax.random.uniform(k_slot, (m,))
-    new_values, new_counts = reservoir_fold(
-        stratum_ids, payload, u_accept, u_slot, mask,
-        state.counts, state.capacity, state.values,
-        block_m=block_m, interpret=_interpret())
-    return dataclasses.replace(state, values=new_values, counts=new_counts,
-                               key=key)
+    return oasrs.update_chunk(state, stratum_ids, payload, mask,
+                              backend="pallas", block_m=block_m)

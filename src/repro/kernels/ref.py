@@ -43,6 +43,27 @@ def weighted_hist_ref(values, stratum_ids, weights, mask, edges,
     return whist, counts
 
 
+def ring_reservoir_fold_ref(slot_ids, stratum_ids, num_strata, payload,
+                            u_accept, u_slot, mask, counts, capacity,
+                            values):
+    """Oracle for the FUSED ring-layout fold (runtime ingest hot path).
+
+    The runtime flattens its [K, S] (ring-slot × stratum) reservoir ring
+    to one K·S stratum axis and routes each item once to its
+    (slot, stratum) cell; an item's rank within the combined cell equals
+    its rank within the stratum of that interval, so the flat fold IS
+    Algorithm 1 per cell. ``counts``/``capacity`` are ``[K, S]``,
+    ``values`` ``[K, S, N]``; returns the same shapes.
+    """
+    k, s, n = values.shape
+    flat_sid = np.asarray(slot_ids) * num_strata + np.asarray(stratum_ids)
+    v, c = reservoir_fold_ref(
+        flat_sid, payload, u_accept, u_slot, mask,
+        np.asarray(counts).reshape(-1), np.asarray(capacity).reshape(-1),
+        np.asarray(values).reshape(k * s, n))
+    return v.reshape(k, s, n), c.reshape(k, s)
+
+
 def reservoir_fold_ref(stratum_ids, payload, u_accept, u_slot, mask,
                        counts, capacity, values):
     """Item-at-a-time reservoir fold (numpy) — the literal Algorithm 1.

@@ -19,10 +19,19 @@ The grid walks item tiles; reservoir/counter blocks use constant index maps
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default: on this CPU container the kernel body runs
+    under the Pallas interpreter; set ``REPRO_PALLAS_COMPILE=1`` on TPU to
+    lower it for real. (Shared by ``kernels/ops.py`` and the
+    ``backend="pallas"`` path of ``core/oasrs.update_chunk``.)"""
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
 def _fold_kernel(sid_ref, pay_ref, u_ref, uslot_ref, mask_ref,
@@ -75,7 +84,10 @@ def reservoir_fold(stratum_ids: jax.Array, payload: jax.Array,
       values: ``[S, N_max]`` current reservoir payloads.
 
     Returns:
-      ``(new_values [S, N_max], new_counts [S])``.
+      ``(new_values [S, N_max], new_counts [S])``. The reservoir and
+      counter inputs are aliased to the outputs (``input_output_aliases``)
+      so a donated ring buffer is updated in place — no [S, N_max]
+      re-materialization per chunk.
     """
     m = stratum_ids.shape[0]
     s, n_max = values.shape
@@ -100,6 +112,10 @@ def reservoir_fold(stratum_ids: jax.Array, payload: jax.Array,
         out_specs=[full_res, full_vec],
         out_shape=[jax.ShapeDtypeStruct((s, n_max), values.dtype),
                    jax.ShapeDtypeStruct((1, s), jnp.int32)],
+        # In-place hot path: reservoirs (input 7) and counters (input 5)
+        # alias their outputs, composing with the executors' donated
+        # step buffers — the ring is mutated, never re-allocated.
+        input_output_aliases={7: 0, 5: 1},
         interpret=interpret,
     )(stratum_ids[None, :], payload[None, :], u_accept[None, :],
       u_slot[None, :], mask[None, :], counts[None, :], capacity[None, :],

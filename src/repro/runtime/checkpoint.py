@@ -136,7 +136,23 @@ def capture(ex) -> RuntimeCheckpoint:
     NOT captured: the snapshot's ``stream_offset`` points before them
     and deterministic replay re-pushes them, which re-forms the same
     micro-batches — the source-rewind half of exactly-once.
+
+    Donation interplay: the executors' compiled steps donate their
+    RuntimeState buffers (in-place ring updates), so a snapshot must
+    copy the state out BETWEEN steps — ``device_get`` below materializes
+    host copies of the live buffers before the next step invalidates
+    them. A stale reference captured across a step would be a deleted
+    buffer; that programming error is refused here with a named leaf
+    instead of surfacing as an XLA runtime error mid-serialize.
     """
+    for path, leaf in jax.tree_util.tree_flatten_with_path(ex.state)[0]:
+        deleted = getattr(leaf, "is_deleted", None)
+        if deleted is not None and deleted():
+            raise RuntimeError(
+                f"cannot snapshot: state leaf {jax.tree_util.keystr(path)} "
+                "was invalidated by buffer donation (the executor state "
+                "reference predates the last compiled step; snapshot "
+                "between steps, from the executor's live state)")
     pending_items = sum(int(c.values.size)
                         for c in getattr(ex, "_pending", ()))
     return RuntimeCheckpoint(

@@ -62,7 +62,10 @@ class ControllerConfig:
 
 def init(capacity: jax.Array) -> ControllerState:
     cap = jnp.asarray(capacity, jnp.int32)
-    return ControllerState(capacity=cap, base_capacity=cap,
+    # .copy(): capacity and base_capacity must be DISTINCT buffers — the
+    # executors donate the whole ControllerState to their compiled steps,
+    # and XLA rejects donating one buffer twice.
+    return ControllerState(capacity=cap, base_capacity=cap.copy(),
                            latency_ema=jnp.zeros((), jnp.float32),
                            pressure=jnp.zeros((), jnp.float32))
 

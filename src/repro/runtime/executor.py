@@ -2,11 +2,14 @@
 
 The paper's claim is that OASRS is generic across the two prominent
 stream-system types; this module *executes* that claim. Both executors
-share ONE jitted ingest core (`_ingest_chunk` — watermark routing +
-per-interval OASRS folds + ring maintenance), so their sampling
-trajectories are identical chunk-for-chunk and registered-query answers
-agree exactly at window boundaries (property-tested). They differ only
-in *when* the core runs and *where* the host synchronizes:
+share ONE jitted ingest core (`_ingest_chunk` — watermark routing + a
+single route-once reservoir fold over the flattened [K·S] ring×stratum
+axis + ring maintenance), so their sampling trajectories are identical
+chunk-for-chunk and registered-query answers agree exactly at window
+boundaries (property-tested). The compiled steps DONATE their
+RuntimeState buffers, so the [K, S, N_max, …] ring is updated in place
+rather than re-materialized every chunk. They differ only in *when* the
+core runs and *where* the host synchronizes:
 
 * :class:`BatchedExecutor` — micro-batch model (Spark Streaming): chunks
   accumulate host-side; every ``batch_chunks`` arrivals ONE jitted window
@@ -34,6 +37,7 @@ from typing import Dict, Iterable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import distributed as dist
 from repro.core import error as err
@@ -63,6 +67,8 @@ class RuntimeConfig:
     batch_chunks: int = 4              # batched mode: chunks per window step
     max_batch_chunks: int = 32
     emit_every: int = 4                # pipelined mode: chunks per emission
+    backend: Optional[str] = None      # reservoir fold: "jnp"|"pallas"|auto
+    ingest: str = "fused"              # "fused" single-pass | "masked" legacy
 
 
 @dataclass_pytree
@@ -86,7 +92,8 @@ class Emission:
     on_time: int
     late: int
     dropped: int
-    capacity: jax.Array           # [S] i32 controller capacity after update
+    capacity: np.ndarray          # [S] i32 controller capacity after update
+    #                               (host copy — the live state is donated)
     latency_s: float              # measured step latency fed back
     items: int                    # items pushed since previous emission
 
@@ -130,21 +137,21 @@ def init_state(cfg: RuntimeConfig, key: jax.Array) -> RuntimeState:
 # The shared jitted core.
 # ---------------------------------------------------------------------------
 
-def _ingest_chunk(cfg: RuntimeConfig, state: RuntimeState,
-                  chunk: TimestampedChunk) -> RuntimeState:
-    """Fold one chunk: watermark-route items, maintain the interval ring,
-    update per-interval reservoirs. Pure jnp — no collectives, no host.
+def _route_and_reset(cfg: RuntimeConfig, state: RuntimeState,
+                     chunk: TimestampedChunk):
+    """Shared ingest prologue: advance the watermark, reassign ring slots.
+
+    Ring maintenance without an explicit slide loop: interval j lives in
+    slot j mod K, so each slot's *desired* occupant is the newest live
+    interval congruent to it. A slot whose occupant changed is reset
+    (counts zeroed — reservoir contents die via slot_mask) and adopts
+    the controller's current capacity; live slots keep theirs so the
+    Vitter acceptance invariant holds within an interval.
     """
     k = cfg.num_intervals
     r = wmk.route_chunk(state.wm, state.open_interval, chunk.times,
                         chunk.mask, cfg.interval_span, cfg.allowed_lateness,
                         k)
-    # Ring maintenance without an explicit slide loop: interval j lives in
-    # slot j mod K, so each slot's *desired* occupant is the newest live
-    # interval congruent to it. A slot whose occupant changed is reset
-    # (counts zeroed — reservoir contents die via slot_mask) and adopts
-    # the controller's current capacity; live slots keep theirs so the
-    # Vitter acceptance invariant holds within an interval.
     slots = jnp.arange(k, dtype=jnp.int32)
     desired = r.open_interval - jnp.mod(r.open_interval - slots, k)
     reset = desired != state.slot_interval
@@ -157,15 +164,12 @@ def _ingest_chunk(cfg: RuntimeConfig, state: RuntimeState,
         iv,
         counts=jnp.where(reset[:, None], 0, iv.counts),
         capacity=jnp.where(reset[:, None], adopt[None, :], iv.capacity))
+    return r, iv, desired
 
-    # Route accepted items to the slot owning their event interval, then
-    # fold every slot's masked view of the chunk (collective-free local
-    # update — the distributed ingest contract).
-    slot_masks = r.accept[None, :] & (
-        r.target_interval[None, :] == desired[:, None])          # [K, M]
-    iv = jax.vmap(dist.local_update, in_axes=(0, None, None, 0))(
-        iv, chunk.stratum_ids, chunk.values, slot_masks)
 
+def _finish_ingest(cfg: RuntimeConfig, state: RuntimeState, r, iv,
+                   desired) -> RuntimeState:
+    k = cfg.num_intervals
     window = win.WindowState(
         intervals=iv,
         cursor=jnp.mod(r.open_interval + 1, k),
@@ -173,6 +177,84 @@ def _ingest_chunk(cfg: RuntimeConfig, state: RuntimeState,
     return RuntimeState(window=window, slot_interval=desired,
                         open_interval=r.open_interval, wm=r.wm,
                         ctrl=state.ctrl)
+
+
+def _ingest_chunk(cfg: RuntimeConfig, state: RuntimeState,
+                  chunk: TimestampedChunk) -> RuntimeState:
+    """Fold one chunk: watermark-route items, maintain the interval ring,
+    update per-interval reservoirs. Pure jnp — no collectives, no host.
+
+    Single-pass route-once fold: the [K, S] (ring-slot × stratum) space
+    is flattened to ONE K·S stratum axis and each accepted item is routed
+    once to its (slot, stratum) cell, so an M-item chunk performs one
+    reservoir fold instead of K masked ones. Exact sequential Vitter
+    semantics are preserved — an item's rank within the combined
+    (slot, stratum) cell equals its rank within the stratum of that
+    interval, so acceptance probabilities (and hence batched/pipelined
+    mode equivalence) are bitwise those of the per-slot fold
+    (``_ingest_chunk_masked`` is the proof harness).
+    """
+    if cfg.ingest == "masked":
+        return _ingest_chunk_masked(cfg, state, chunk)
+    if cfg.ingest != "fused":
+        raise ValueError(f"unknown ingest path {cfg.ingest!r}; "
+                         "expected 'fused' or 'masked'")
+    k, s_cnt = cfg.num_intervals, cfg.num_strata
+    r, iv, desired = _route_and_reset(cfg, state, chunk)
+
+    # Route each accepted item ONCE: slot j = interval mod K owns it, and
+    # it survives only if that slot currently holds its interval (an item
+    # for an evicted interval whose slot was recycled must not leak into
+    # the new occupant).
+    tgt_slot = jnp.mod(r.target_interval, k)                     # [M]
+    live = r.accept & (desired[tgt_slot] == r.target_interval)
+    flat_sid = tgt_slot * s_cnt + chunk.stratum_ids              # [M]
+
+    # One collective-free fold over the flattened K·S stratum axis (the
+    # distributed ingest contract), driven by the ring's lead PRNG key.
+    flat = oasrs.OASRSState(
+        values=jax.tree.map(
+            lambda v: v.reshape((k * s_cnt,) + v.shape[2:]), iv.values),
+        counts=iv.counts.reshape(-1),
+        capacity=iv.capacity.reshape(-1),
+        key=iv.key[0])
+    flat = dist.local_update(flat, flat_sid, chunk.values, live,
+                             backend=cfg.backend)
+    iv = dataclasses.replace(
+        iv,
+        values=jax.tree.map(lambda f, v: f.reshape(v.shape),
+                            flat.values, iv.values),
+        counts=flat.counts.reshape(k, s_cnt),
+        key=iv.key.at[0].set(flat.key))
+    return _finish_ingest(cfg, state, r, iv, desired)
+
+
+def _ingest_chunk_masked(cfg: RuntimeConfig, state: RuntimeState,
+                         chunk: TimestampedChunk) -> RuntimeState:
+    """Pre-fusion reference ingest: fold EVERY ring slot's masked view of
+    the chunk — K reservoir folds of M items each (K·M work).
+
+    Kept as the benchmark baseline (``benchmarks/bench_ingest.py``) and
+    as the bitwise cross-check of the fused path: the uniforms are drawn
+    once from the ring's lead key exactly like the fused fold, and each
+    item is masked into exactly one slot, so both paths produce
+    IDENTICAL states (asserted in ``tests/test_ingest_fused.py``).
+    """
+    k = cfg.num_intervals
+    m = chunk.stratum_ids.shape[0]
+    r, iv, desired = _route_and_reset(cfg, state, chunk)
+
+    slot_masks = r.accept[None, :] & (
+        r.target_interval[None, :] == desired[:, None])          # [K, M]
+    key, k_u, k_slot = jax.random.split(iv.key[0], 3)
+    u_accept = jax.random.uniform(k_u, (m,))
+    u_slot = jax.random.uniform(k_slot, (m,))
+    folded = jax.vmap(
+        lambda st, mk: oasrs.apply_chunk_uniforms(
+            st, chunk.stratum_ids, chunk.values, mk, u_accept, u_slot),
+        in_axes=(0, 0))(iv, slot_masks)
+    iv = dataclasses.replace(folded, key=iv.key.at[0].set(key))
+    return _finish_ingest(cfg, state, r, iv, desired)
 
 
 def _merged_view(cfg: RuntimeConfig, state: RuntimeState):
@@ -359,6 +441,11 @@ class _ExecutorBase:
         cap = self.state.ctrl.capacity
         if self.cfg.num_shards > 1:
             cap = jnp.sum(cap, axis=0)     # global capacity = Σ shard caps
+        # Materialize: the recorded capacity must not reference the live
+        # state buffer — the next compiled step DONATES the state, which
+        # would delete the emission's array out from under the consumer.
+        # (Emissions are host records; this is the host sync boundary.)
+        cap = np.asarray(cap)
         # The index comes from the monotonic cursor, NOT len(emissions):
         # a restored executor's emissions list restarts empty but its
         # cursor continues from the checkpoint, so re-emitted suffix
@@ -408,6 +495,12 @@ class BatchedExecutor(_ExecutorBase):
         — otherwise every pressure-triggered batch resize would measure
         trace+compile of the new scan shape as step latency, re-spiking
         the pressure signal and cascading resizes to the maximum.
+
+        The state argument is DONATED: the [K, S, N_max, …] ring is
+        updated in place instead of re-materialized every window (the
+        previous ``self.state`` buffer is dead the moment the step runs;
+        checkpoints copy out via ``capture`` BETWEEN steps, never across
+        one).
         """
         fn = self._step_cache.get(num_chunks)
         if fn is None:
@@ -425,7 +518,8 @@ class BatchedExecutor(_ExecutorBase):
                                           latency_prev)
                 return state, results
 
-            fn = jax.jit(step).lower(state, stacked, latency_prev).compile()
+            fn = jax.jit(step, donate_argnums=0).lower(
+                state, stacked, latency_prev).compile()
             self._step_cache[num_chunks] = fn
         return fn
 
@@ -493,7 +587,12 @@ class PipelinedExecutor(_ExecutorBase):
             self.trace_count += 1          # increments at TRACE time only
             return ingest(cfg, state, chunk)
 
-        self._step = jax.jit(core)
+        # donate_argnums=0: the ring buffer is updated in place every
+        # chunk — the hot loop never re-materializes [K, S, N_max, …].
+        # Safe because `push` immediately rebinds self.state to the step
+        # output and snapshots copy out (capture/device_get) between
+        # pushes, never holding the donated device buffer.
+        self._step = jax.jit(core, donate_argnums=0)
 
         def emit(state, latency_s):
             results, stats = _evaluate(cfg, registry, state)
@@ -501,7 +600,7 @@ class PipelinedExecutor(_ExecutorBase):
                                       latency_s)
             return state, results
 
-        self._emit = jax.jit(emit)
+        self._emit = jax.jit(emit, donate_argnums=0)
         self._chunks_since_emit = 0
         self._emit_t0 = time.perf_counter()
 

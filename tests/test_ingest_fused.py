@@ -1,0 +1,261 @@
+"""Fused single-pass ring ingest tests.
+
+The tentpole contract: the route-once fold over the flattened [K·S]
+(ring-slot × stratum) axis is BITWISE identical to the legacy masked-vmap
+path (K reservoir folds per chunk), the jnp and Pallas fold backends are
+bitwise interchangeable, and the compiled executor steps DONATE their
+RuntimeState buffers (in-place ring updates) without retracing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import oasrs
+from repro.runtime import (BatchedExecutor, PipelinedExecutor,
+                           QueryRegistry, RuntimeConfig, init_state,
+                           perturb_event_times, timestamped_stream)
+from repro.runtime.executor import _ingest_chunk, _ingest_chunk_masked
+from repro.stream import GaussianSource, StreamAggregator
+
+SPEC = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def _registry():
+    return (QueryRegistry()
+            .register("total", "sum")
+            .register("avg", "mean")
+            .register("hist", "histogram", edges=(0.0, 100.0, 5000.0, 2e4)))
+
+
+def _cfg(**kw):
+    base = dict(num_strata=3, capacity=64, num_intervals=4,
+                interval_span=1.0, allowed_lateness=0.5,
+                batch_chunks=4, emit_every=4)
+    base.update(kw)
+    return RuntimeConfig(**base)
+
+
+def _chunks(num_chunks=12, chunk_size=256, seed=3, disorder=None, key=None):
+    agg = StreamAggregator(GaussianSource(), seed=seed)
+    rate = chunk_size * num_chunks / 4.0
+    chunks = list(timestamped_stream(agg, chunk_size, num_chunks, rate))
+    if disorder is not None:
+        chunks = perturb_event_times(chunks, key, max_displacement=disorder)
+    return chunks
+
+
+def _assert_state_equal(a, b):
+    for (pa, la), lb in zip(jax.tree_util.tree_flatten_with_path(a)[0],
+                            jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=jax.tree_util.keystr(pa))
+
+
+# ---------------------------------------------------------------------------
+# Fused fold == legacy masked-vmap fold, bitwise.
+# ---------------------------------------------------------------------------
+
+def test_fused_equals_masked_chunk_for_chunk(key):
+    """Both ingest paths draw the chunk uniforms from the ring's lead key
+    and every item lands in exactly one (slot, stratum) cell, so states
+    must agree bitwise after EVERY chunk — including late arrivals and
+    slot evictions (the disorder exercises both)."""
+    cfg_f = _cfg()
+    cfg_m = _cfg(ingest="masked")
+    chunks = _chunks(disorder=0.35, key=jax.random.fold_in(key, 1))
+    sf = init_state(cfg_f, key)
+    sm = init_state(cfg_m, key)
+    for c in chunks:
+        sf = _ingest_chunk(cfg_f, sf, c)
+        sm = _ingest_chunk(cfg_m, sm, c)
+        _assert_state_equal(sf, sm)
+    assert int(sf.wm.late) > 0          # the sweep exercised late routing
+
+
+def test_fused_equals_masked_dispatch(key):
+    """cfg.ingest='masked' routes through the legacy path (the benchmark
+    baseline must be the real pre-fusion fold, not a renamed alias)."""
+    cfg_m = _cfg(ingest="masked")
+    c = _chunks(num_chunks=1)[0]
+    st = init_state(cfg_m, key)
+    _assert_state_equal(_ingest_chunk(cfg_m, st, c),
+                        _ingest_chunk_masked(cfg_m, st, c))
+    with pytest.raises(ValueError, match="unknown ingest"):
+        _ingest_chunk(_cfg(ingest="nope"), st, c)
+
+
+def test_fused_equals_masked_sharded(key):
+    """The vmap-sharded core preserves the fused/masked equivalence."""
+    from repro.runtime import stamp_sharded
+    cfg_f = _cfg(num_shards=2, capacity=64)
+    cfg_m = _cfg(num_shards=2, capacity=64, ingest="masked")
+    agg = StreamAggregator(GaussianSource(), seed=7)
+    chunks = [stamp_sharded(agg.sharded_interval(e, 2, 128),
+                            e * 0.5, 128 / 0.5) for e in range(6)]
+    sf = init_state(cfg_f, key)
+    sm = init_state(cfg_m, key)
+    core_f = jax.vmap(lambda st, ch: _ingest_chunk(cfg_f, st, ch))
+    core_m = jax.vmap(lambda st, ch: _ingest_chunk(cfg_m, st, ch))
+    for c in chunks:
+        sf, sm = core_f(sf, c), core_m(sm, c)
+    _assert_state_equal(sf, sm)
+
+
+def test_fused_executor_emissions_equal_masked(key):
+    """End to end: fused and masked executors emit IDENTICAL answers —
+    the acceptance contract of the perf rewrite (both modes)."""
+    chunks = _chunks(num_chunks=16, chunk_size=256)
+    for mode in (BatchedExecutor, PipelinedExecutor):
+        ef = mode(_cfg(), _registry(), key).run(chunks)
+        em = mode(_cfg(ingest="masked"), _registry(), key).run(chunks)
+        assert len(ef) == len(em) == 4
+        for a, b in zip(ef, em):
+            for name in a.results:
+                np.testing.assert_array_equal(
+                    np.asarray(a.results[name].value),
+                    np.asarray(b.results[name].value), err_msg=name)
+                np.testing.assert_array_equal(
+                    np.asarray(a.results[name].variance),
+                    np.asarray(b.results[name].variance), err_msg=name)
+            assert (a.on_time, a.late, a.dropped) == \
+                (b.on_time, b.late, b.dropped)
+
+
+# ---------------------------------------------------------------------------
+# Backend parity (jnp <-> Pallas kernel), fast lane.
+# ---------------------------------------------------------------------------
+
+def test_update_chunk_backends_bitwise_identical(key):
+    """oasrs.update_chunk consumes identical uniform draws on both
+    backends — states must match bitwise (interpret-mode kernel)."""
+    st = oasrs.init(5, 8, SPEC, key)
+    sid = jax.random.randint(jax.random.fold_in(key, 1), (300,), 0, 5)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (300,))
+    a = oasrs.update_chunk(st, sid, x, backend="jnp")
+    b = oasrs.update_chunk(st, sid, x, backend="pallas", block_m=128)
+    _assert_state_equal(a, b)
+
+
+def test_runtime_pallas_backend_parity(key):
+    """cfg.backend='pallas' threads the kernel into the fused ingest
+    core; one small chunk must agree bitwise with the jnp backend."""
+    cfg_j = _cfg(capacity=4, num_intervals=2, backend="jnp")
+    cfg_p = _cfg(capacity=4, num_intervals=2, backend="pallas")
+    c = _chunks(num_chunks=1, chunk_size=64)[0]
+    st = init_state(cfg_j, key)
+    _assert_state_equal(_ingest_chunk(cfg_j, st, c),
+                        _ingest_chunk(cfg_p, st, c))
+
+
+def test_update_chunk_backend_validation(key):
+    st = oasrs.init(2, 4, SPEC, key)
+    sid = jnp.zeros((8,), jnp.int32)
+    x = jnp.ones((8,))
+    with pytest.raises(ValueError, match="unknown backend"):
+        oasrs.update_chunk(st, sid, x, backend="cuda")
+    # Pytree payloads have no kernel layout: explicit pallas must refuse.
+    st2 = oasrs.init(2, 4, {"a": SPEC, "b": SPEC}, key)
+    with pytest.raises(ValueError, match="scalar payload"):
+        oasrs.update_chunk(st2, sid, {"a": x, "b": x}, backend="pallas")
+    # ...and the auto default silently takes the jnp fold.
+    out = oasrs.update_chunk(st2, sid, {"a": x, "b": x})
+    assert int(jnp.sum(out.counts)) == 8
+
+
+# ---------------------------------------------------------------------------
+# Donation: the ring buffer is updated in place, not re-materialized.
+# ---------------------------------------------------------------------------
+
+def test_pipelined_step_donates_ring_buffer(key):
+    cfg = _cfg(emit_every=10_000)
+    ex = PipelinedExecutor(cfg, _registry(), key)
+    ring = ex.state.window.intervals.values
+    counts = ex.state.window.intervals.counts
+    c = _chunks(num_chunks=1)[0]
+    ex.push(c)
+    # The pre-push buffers were donated to the compiled step.
+    assert ring.is_deleted() and counts.is_deleted()
+    # ...and the compiled step aliases at least the ring's bytes.
+    ma = ex._step.lower(ex.state, c).compile().memory_analysis()
+    assert ma.alias_size_in_bytes >= ring.nbytes
+
+
+def test_batched_step_donates_ring_buffer(key):
+    cfg = _cfg(batch_chunks=2)
+    ex = BatchedExecutor(cfg, _registry(), key)
+    ring = ex.state.window.intervals.values
+    for c in _chunks(num_chunks=2):
+        ex.push(c)                       # second push flushes the window
+    assert ring.is_deleted()
+    ma = ex._step_cache[2].memory_analysis()
+    assert ma.alias_size_in_bytes >= ring.nbytes
+
+
+def test_snapshot_across_donation_refused(key):
+    """A state reference captured BEFORE a step is a dead buffer after
+    it; capture() must name the problem instead of crashing inside
+    serialization."""
+    cfg = _cfg(emit_every=10_000)
+    ex = PipelinedExecutor(cfg, _registry(), key)
+    stale = ex.state
+    ex.push(_chunks(num_chunks=1)[0])
+    live = ex.state
+    ex.state = stale
+    with pytest.raises(RuntimeError, match="donat"):
+        ex.snapshot()
+    ex.state = live
+    ex.snapshot()                        # live state snapshots fine
+
+
+def test_snapshot_restore_with_donation_roundtrip(key):
+    """Donated steps + checkpointing: snapshot copies out between steps,
+    restore re-materializes fresh buffers, and the recovered run emits
+    the same answers (the PR-3 exactly-once contract survives)."""
+    chunks = _chunks(num_chunks=8, chunk_size=128)
+    cfg = _cfg(emit_every=2)
+    ex = PipelinedExecutor(cfg, _registry(), key)
+    for c in chunks[:4]:
+        ex.push(c)
+    payload = ex.snapshot()
+    full = ex.run(chunks[4:])
+    rec = PipelinedExecutor(cfg, _registry(), jax.random.fold_in(key, 9))
+    rec.restore(payload)
+    rec_emissions = rec.run(chunks[4:])
+    np.testing.assert_array_equal(
+        np.asarray(full[-1].results["total"].value),
+        np.asarray(rec_emissions[-1].results["total"].value))
+
+
+# ---------------------------------------------------------------------------
+# Trace counts: one compile per shape, donation notwithstanding.
+# ---------------------------------------------------------------------------
+
+def test_pipelined_fused_traces_once(key):
+    cfg = _cfg(emit_every=10_000)
+    ex = PipelinedExecutor(cfg, _registry(), key)
+    for c in _chunks(num_chunks=10):
+        ex.push(c)
+    assert ex.trace_count == 1
+
+
+def test_batched_fused_compiles_once_per_batch_size(key):
+    cfg = _cfg(batch_chunks=4)
+    ex = BatchedExecutor(cfg, _registry(), key)
+    for c in _chunks(num_chunks=16):
+        ex.push(c)                       # 4 flushes, one micro-batch size
+    assert list(ex._step_cache) == [4]
+
+
+def test_pipelined_fused_hot_loop_stays_host_free(key):
+    """Donation must not smuggle host callbacks or collectives into the
+    fused hot loop (jaxpr re-asserted post-rewrite)."""
+    cfg = _cfg()
+    state = init_state(cfg, key)
+    c = _chunks(num_chunks=1)[0]
+    jaxpr = str(jax.make_jaxpr(
+        lambda st, ch: _ingest_chunk(cfg, st, ch))(state, c))
+    for prim in ("callback", "psum", "all_gather", "all_reduce",
+                 "infeed", "outfeed"):
+        assert prim not in jaxpr, f"{prim} in fused hot loop!"

@@ -65,6 +65,49 @@ def test_reservoir_kernel_bit_exact(m, s, n, block_m, dtype):
     np.testing.assert_array_equal(np.asarray(got_v), want_v)
 
 
+def _ring_fold_case(m, k, s, n, block_m, seed=0):
+    """Run the kernel on the runtime's flattened [K·S] ring layout and
+    compare bit-exactly against the route-once numpy oracle."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    slot = jax.random.randint(k1, (m,), 0, k)
+    sid = jax.random.randint(k2, (m,), 0, s)
+    pay = jax.random.normal(k3, (m,))
+    ua = jax.random.uniform(k4, (m,))
+    us = jax.random.uniform(k5, (m,))
+    mask = jax.random.uniform(k6, (m,)) > 0.2      # late/evicted rejects
+    counts = jnp.zeros((k, s), jnp.int32)
+    cap = jnp.full((k, s), n, jnp.int32)
+    values = jnp.zeros((k, s, n), jnp.float32)
+    got_v, got_c = reservoir_fold(
+        slot * s + sid, pay, ua, us, mask, counts.reshape(-1),
+        cap.reshape(-1), values.reshape(k * s, n), block_m=block_m,
+        interpret=True)
+    want_v, want_c = ref.ring_reservoir_fold_ref(
+        slot, sid, s, pay, ua, us, mask, counts, cap, values)
+    np.testing.assert_array_equal(
+        np.asarray(got_c).reshape(k, s), want_c)
+    np.testing.assert_array_equal(
+        np.asarray(got_v).reshape(k, s, n), want_v)
+
+
+def test_reservoir_kernel_ring_layout_small():
+    """Fast-lane parity: the fused runtime layout (K·S flattened strata)
+    through the kernel matches the route-once oracle bit-exactly."""
+    _ring_fold_case(m=384, k=4, s=3, n=8, block_m=128)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("m,k,s,n,block_m", [
+    (2048, 8, 8, 32, 512),
+    (4096, 16, 4, 64, 1024),
+    (1500, 16, 16, 16, 256),         # non-divisible m → padding path
+])
+def test_reservoir_kernel_ring_layout_sweep(m, k, s, n, block_m):
+    """Heavyweight interpret-mode ring-layout sweep (nightly lane)."""
+    _ring_fold_case(m, k, s, n, block_m, seed=m + k)
+
+
 def test_reservoir_kernel_incremental_fold():
     """Folding two chunks == folding the concatenation (streaming use)."""
     key = jax.random.PRNGKey(0)
