@@ -29,7 +29,7 @@ def main(argv=None) -> None:
                             fig5_microbench, fig6_rates_windows,
                             fig7_scale_skew, fig8_means_over_time,
                             fig9_network_traffic, fig10_taxi,
-                            fig_quantiles, fig_recovery,
+                            fig_emission, fig_quantiles, fig_recovery,
                             fig_runtime_modes)
     modules = [
         ("fig5(a-c) microbenchmarks", fig5_microbench),
@@ -41,6 +41,7 @@ def main(argv=None) -> None:
         ("quantile engine accuracy/latency", fig_quantiles),
         ("runtime modes: batched vs pipelined", fig_runtime_modes),
         ("recovery: checkpoint overhead + replay latency", fig_recovery),
+        ("emission: staleness, cadence vs watermark", fig_emission),
         ("ingest hot path: fused vs masked-vmap", bench_ingest),
         ("kernel bench", bench_kernels),
         ("training-plane bench", bench_train),

@@ -146,6 +146,52 @@ def estimate_counts(n: jax.Array, counts: jax.Array,
     return Estimate(value=value, variance=jnp.sum(per, axis=0))
 
 
+def _group_sum(x: jax.Array, group_ids: jax.Array,
+               num_groups: int) -> jax.Array:
+    return jnp.zeros((num_groups,), x.dtype).at[group_ids].add(x)
+
+
+def estimate_sum_grouped(stats: StratumStats, group_ids: jax.Array,
+                         num_groups: int) -> Estimate:
+    """Per-group SUM estimates (Eqs. 2–3, 6) over a partition of cells.
+
+    ``group_ids [G]`` assigns each stratum cell to one of ``num_groups``
+    disjoint windows (e.g. the per-key windows: cells grouped by their
+    stratum key). Every group is its own stratified estimate — cells are
+    independently sampled, so Eq. 5 applies per group exactly as it does
+    for the merged window — and the whole vector comes out of one
+    segment-sum pass. Returns a vector :class:`Estimate` ``[num_groups]``.
+    """
+    c = stats.counts.astype(jnp.float32)
+    y = jnp.maximum(stats.taken, 1).astype(jnp.float32)
+    w = jnp.where(stats.counts > stats.taken, c / y, 1.0)
+    per_var = c * jnp.maximum(c - y, 0.0) * stats.s2() / y   # Eq. 6 per cell
+    return Estimate(
+        value=_group_sum(w * stats.sums, group_ids, num_groups),
+        variance=_group_sum(per_var, group_ids, num_groups))
+
+
+def estimate_mean_grouped(stats: StratumStats, group_ids: jax.Array,
+                          num_groups: int) -> Estimate:
+    """Per-group MEAN estimates (Eq. 4 / Eq. 8 with Eq. 9 variance).
+
+    The stratum weights ``ω_i = C_i / C_group`` are normalized within
+    each group, so each entry equals :func:`estimate_mean` evaluated on
+    that group's cells alone. Groups with no arrivals report 0 ± 0.
+    """
+    c = stats.counts.astype(jnp.float32)
+    tot = jnp.maximum(_group_sum(c, group_ids, num_groups), 1.0)
+    omega = c / tot[group_ids]
+    y = jnp.maximum(stats.taken, 1).astype(jnp.float32)
+    w = jnp.where(stats.counts > stats.taken, c / y, 1.0)
+    value = _group_sum(w * stats.sums, group_ids, num_groups) / tot
+    fpc = jnp.where(c > 0, jnp.maximum(c - y, 0.0) / jnp.maximum(c, 1.0),
+                    0.0)
+    per = omega * omega * stats.s2() / y * fpc                # Eq. 9 per cell
+    return Estimate(value=value,
+                    variance=_group_sum(per, group_ids, num_groups))
+
+
 def merge_stats(*stats: StratumStats) -> StratumStats:
     """Concatenate independent stratum summaries (Eq. 5: variances add).
 

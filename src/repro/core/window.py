@@ -141,6 +141,99 @@ def sample_view(window: WindowState,
                          taken=taken.reshape(-1))
 
 
+# ---------------------------------------------------------------------------
+# Window kinds beyond the merged tumbling ring: per-key + gap sessions.
+# ---------------------------------------------------------------------------
+
+def session_intervals(activity: jax.Array, slot_interval: jax.Array,
+                      gap_intervals: int) -> jax.Array:
+    """Per-key *current-session* membership over the interval ring.
+
+    ``activity [K, S]`` flags which (slot, key) cells hold any accepted
+    items; ``slot_interval [K]`` gives each slot's event-time interval
+    id.  A key's current session is the maximal run of its active
+    intervals ending at its newest one in which consecutive active
+    intervals are at most ``gap_intervals`` apart — the interval-granular
+    form of a gap-timeout session window (event-time gaps are resolved
+    to interval ids, the resolution at which the ring samples).  Pure
+    ``jnp`` (one K-step scan over slots in descending interval order),
+    so it sits inside the jitted emission step.  Returns ``[K, S]`` bool.
+    """
+    order = jnp.argsort(-slot_interval)            # newest interval first
+    gap = jnp.int32(gap_intervals)
+
+    def body(carry, slot):
+        last, started, stopped = carry
+        iv = slot_interval[slot]
+        act = activity[slot]
+        within = (last - iv) <= gap
+        include = act & ~stopped & (~started | within)
+        # An active interval beyond the gap ends the walk for that key:
+        # anything older belongs to a PREVIOUS session.
+        stopped = stopped | (started & act & ~within)
+        last = jnp.where(include, iv, last)
+        started = started | include
+        return (last, started, stopped), include
+
+    s = activity.shape[1]
+    init = (jnp.full((s,), jnp.int32(-(2 ** 30))),
+            jnp.zeros((s,), bool), jnp.zeros((s,), bool))
+    _, include = jax.lax.scan(body, init, order)
+    k = activity.shape[0]
+    return jnp.zeros((k, s), bool).at[order].set(include)
+
+
+def activity_mask(window: WindowState) -> jax.Array:
+    """``[K, S]`` — live cells that accepted at least one item."""
+    return _live_mask(window)[:, None] & (window.intervals.counts > 0)
+
+
+def restrict_view(view, cell_mask: jax.Array):
+    """Zero out the counts/taken of cells outside ``cell_mask``.
+
+    Restriction IS the window algebra here: a per-key window, a session
+    window or a single closed interval are all just cell subsets of the
+    same merged sample pass, and a zero-count cell contributes nothing to
+    any estimator downstream.
+    """
+    import dataclasses as _dc
+    return _dc.replace(
+        view,
+        counts=jnp.where(cell_mask, view.counts, 0),
+        taken=jnp.where(cell_mask, view.taken, 0))
+
+
+def query_per_key_sum(window: WindowState,
+                      extract=lambda v: v) -> err.Estimate:
+    """Per-key tumbling-window SUMs: vector Estimate, one per stratum."""
+    s = window.intervals.counts.shape[1]
+    stats = window_stats(window, extract)
+    gid = jnp.arange(stats.counts.shape[0], dtype=jnp.int32) % s
+    return err.estimate_sum_grouped(stats, gid, s)
+
+
+def query_session_sum(window: WindowState, gap_intervals: int,
+                      slot_interval: Optional[jax.Array] = None,
+                      extract=lambda v: v) -> err.Estimate:
+    """Per-key current-session SUMs over the ring (vector Estimate).
+
+    ``slot_interval`` defaults to the recency ranks implied by the
+    cursor — callers embedded in the runtime pass the executor's real
+    event-interval ids instead.
+    """
+    k, s = window.intervals.counts.shape
+    if slot_interval is None:
+        slot_interval = jnp.mod(
+            jnp.arange(k, dtype=jnp.int32) - window.cursor, jnp.maximum(k, 1))
+    smask = session_intervals(activity_mask(window), slot_interval,
+                              gap_intervals)
+    view = restrict_view(sample_view(window, extract), smask.reshape(-1))
+    stats = err.stratum_stats_from_sample(
+        view.values, view.counts, view.taken, view.slot_mask())
+    gid = jnp.arange(k * s, dtype=jnp.int32) % s
+    return err.estimate_sum_grouped(stats, gid, s)
+
+
 def _window_key(window: WindowState, salt: int) -> jax.Array:
     return jax.random.fold_in(window.intervals.key[0], salt)
 

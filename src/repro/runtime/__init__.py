@@ -13,15 +13,17 @@ from repro.runtime.executor import (BatchedExecutor, Emission,
                                     PipelinedExecutor, RuntimeConfig,
                                     RuntimeState, init_state)
 from repro.runtime.records import (TimestampedChunk, perturb_event_times,
-                                   stamp, stamp_sharded,
+                                   silence_key, stamp, stamp_sharded,
                                    timestamped_stream)
-from repro.runtime.registry import QueryRegistry, StandingQuery
+from repro.runtime.registry import (EmissionContext, QueryRegistry,
+                                    StandingQuery)
 
 __all__ = [
     "checkpoint", "controller", "executor", "records", "registry",
     "watermark", "Checkpointer", "RuntimeCheckpoint",
     "ControllerConfig", "ControllerState", "BatchedExecutor", "Emission",
     "PipelinedExecutor", "RuntimeConfig", "RuntimeState", "init_state",
-    "TimestampedChunk", "perturb_event_times", "stamp", "stamp_sharded",
-    "timestamped_stream", "QueryRegistry", "StandingQuery",
+    "TimestampedChunk", "perturb_event_times", "silence_key", "stamp",
+    "stamp_sharded", "timestamped_stream", "EmissionContext",
+    "QueryRegistry", "StandingQuery",
 ]

@@ -44,12 +44,13 @@ import time
 from typing import Any, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime import controller as ctl
 from repro.runtime import watermark as wmk
 
-FORMAT = 1
+FORMAT = 2
 _HEADER = "__header__"
 
 
@@ -57,16 +58,20 @@ _HEADER = "__header__"
 #: without changing any array shape — a restore across differing values
 #: would silently mis-route replayed items (or re-emit answers over
 #: different windows under the same indices), so they are fingerprinted
-#: into the checkpoint and validated on restore.
+#: into the checkpoint and validated on restore.  ``emission`` is the
+#: sharpest case: a cadence checkpoint restored into a watermark-driven
+#: executor (or vice versa) would replay the suffix under a different
+#: emission schedule, so the same ``Emission.index`` would name a
+#: different answer — refused by name.
 _SEMANTIC_FIELDS = ("num_strata", "num_intervals", "interval_span",
                     "allowed_lateness", "num_shards", "emit_every",
-                    "accuracy_query", "controller", "queries")
+                    "emission", "accuracy_query", "controller", "queries")
 
 
 def config_fingerprint(cfg, registry) -> dict:
     fp = {f: getattr(cfg, f) for f in
           ("num_strata", "num_intervals", "interval_span",
-           "allowed_lateness", "num_shards", "emit_every",
+           "allowed_lateness", "num_shards", "emit_every", "emission",
            "accuracy_query")}
     # Controller feedback is deterministic state evolution (accuracy
     # budget → adopted capacities → reservoir contents), so its targets
@@ -86,15 +91,18 @@ def config_fingerprint(cfg, registry) -> dict:
     # The registered query set is part of the answers contract too:
     # index-dedupe only works if emission i answers the same questions —
     # including their answer-shaping parameters (a quantile query with
-    # different qs is a different question under the same name). Lists,
-    # not tuples, so the JSON round-trip compares equal. A `count`
-    # predicate is a callable and can't be fingerprinted portably; its
-    # presence is recorded, its identity is the caller's contract.
+    # different qs is a different question under the same name, and a
+    # session query with a different gap timeout covers different
+    # windows). Lists, not tuples, so the JSON round-trip compares
+    # equal. A `count` predicate is a callable and can't be
+    # fingerprinted portably; its presence is recorded, its identity is
+    # the caller's contract.
     fp["queries"] = [
         [q.name, q.kind,
          None if q.qs is None else list(q.qs),
          None if q.edges is None else list(q.edges),
-         q.k, q.num_replicates, q.method, q.predicate is not None]
+         q.k, q.num_replicates, q.method, q.predicate is not None,
+         q.window, q.session_gap]
         for q in registry.queries]
     return fp
 
@@ -126,6 +134,12 @@ class RuntimeCheckpoint:
     last_latency: float       # controller feedback carried into next step
     state: Any                # RuntimeState pytree (device or numpy leaves)
     config: dict              # semantic RuntimeConfig fingerprint
+    emitted_through: int = -1  # watermark emission: newest interval whose
+    #                            close already fired (-1 under cadence)
+    emit_key: Any = None      # watermark emission base PRNG key (list of
+    #                           ints) — per-interval bootstrap draws must
+    #                           survive a restore into an executor that
+    #                           was constructed with a different key
 
 
 def capture(ex) -> RuntimeCheckpoint:
@@ -165,6 +179,8 @@ def capture(ex) -> RuntimeCheckpoint:
         last_latency=float(ex._last_latency),
         state=jax.device_get(ex.state),
         config=config_fingerprint(ex.cfg, ex.registry),
+        emitted_through=ex._emitted_through,
+        emit_key=np.asarray(ex._emit_base_key).tolist(),
     )
 
 
@@ -202,6 +218,16 @@ def restore_into(ex, ckpt: RuntimeCheckpoint) -> None:
     ex._emission_cursor = ckpt.emissions_done
     ex._items_since_emit = ckpt.items_since_emit
     ex._last_latency = ckpt.last_latency
+    # Watermark-driven emission state: the host frontier mirror restarts
+    # from the snapshot's device frontier (bitwise: both sides track the
+    # same masked-f32-max of chunk times), and the emitted-through
+    # cursor + base key resume so a replayed suffix re-fires the same
+    # (interval, index) emissions with the same bootstrap draws.
+    ex._emitted_through = ckpt.emitted_through
+    if ckpt.emit_key is not None:
+        ex._emit_base_key = jnp.asarray(ckpt.emit_key, jnp.uint32)
+    ex._host_frontier = np.atleast_1d(
+        np.asarray(ckpt.state.wm.max_time, np.float32)).copy()
     if ex.mode == "batched":
         ex._pending = []
         ex.batch_chunks = ckpt.batch_chunks
@@ -250,6 +276,8 @@ def to_bytes(ckpt: RuntimeCheckpoint) -> bytes:
         "chunks_since_emit": ckpt.chunks_since_emit,
         "batch_chunks": ckpt.batch_chunks,
         "last_latency": ckpt.last_latency,
+        "emitted_through": ckpt.emitted_through,
+        "emit_key": ckpt.emit_key,
         "config": ckpt.config,
         "leaf_paths": [jax.tree_util.keystr(p) for p, _ in paths_and_leaves],
         "manifest": manifest(ckpt),
@@ -293,6 +321,8 @@ def from_bytes(data: bytes, template_state) -> RuntimeCheckpoint:
         last_latency=header["last_latency"],
         state=state,
         config=header["config"],
+        emitted_through=header["emitted_through"],
+        emit_key=header["emit_key"],
     )
     _validate_state(template_state, state)
     return ckpt
@@ -313,6 +343,7 @@ def manifest(ckpt: RuntimeCheckpoint) -> dict:
         "controller": ctl.export(st.ctrl),
         "open_interval": np.asarray(st.open_interval).tolist(),
         "slot_interval": np.asarray(st.slot_interval).tolist(),
+        "emitted_through": ckpt.emitted_through,
     }
 
 

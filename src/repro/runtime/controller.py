@@ -136,14 +136,25 @@ def update(ctrl: ControllerState, cfg: ControllerConfig,
 
 
 def next_batch_chunks(batch_chunks: int, pressure: float,
-                      max_batch_chunks: int) -> int:
+                      max_batch_chunks: int,
+                      closes_per_batch: int = 0) -> int:
     """Host-side micro-batch sizing from the pressure signal (batched mode).
 
     Sustained pressure > 1 doubles the micro-batch (amortizing per-step
     overhead raises throughput at the cost of emission latency); pressure
     < 1/2 halves it back. Power-of-two quantization bounds retracing of
     the scanned window step to ``log2(max_batch_chunks)`` shapes.
+
+    ``closes_per_batch`` is the *per-window* pressure signal of
+    watermark-driven emission: the number of event intervals whose
+    answers one micro-batch closed.  More than one close per batch means
+    the batch barrier — not the watermark — is pacing emissions (answers
+    for the earlier closes sat finished-but-unemitted behind the scan),
+    so the micro-batch halves regardless of throughput pressure;
+    emission staleness outranks amortization.
     """
+    if closes_per_batch > 1 and batch_chunks > 1:
+        return batch_chunks // 2
     if pressure > 1.0 and batch_chunks < max_batch_chunks:
         return min(batch_chunks * 2, max_batch_chunks)
     if pressure < 0.5 and batch_chunks > 1:

@@ -69,6 +69,16 @@ class RuntimeConfig:
     emit_every: int = 4                # pipelined mode: chunks per emission
     backend: Optional[str] = None      # reservoir fold: "jnp"|"pallas"|auto
     ingest: str = "fused"              # "fused" single-pass | "masked" legacy
+    emission: str = "cadence"          # "cadence" chunk-count | "watermark"
+    #   cadence   — emissions on the driver loop's chunk count (batched:
+    #               per micro-batch flush; pipelined: every emit_every).
+    #   watermark — emissions are a property of EVENT TIME: interval j's
+    #               answers are emitted exactly once, when the watermark
+    #               frontier passes its close (j+1)·interval_span — after
+    #               every late-but-allowed item has landed in its slot.
+    #               Emissions carry Emission.interval and evaluate the
+    #               registry on that closed interval's cells (session
+    #               windows keep reading the whole ring).
 
 
 @dataclass_pytree
@@ -96,6 +106,9 @@ class Emission:
     #                               (host copy — the live state is donated)
     latency_s: float              # measured step latency fed back
     items: int                    # items pushed since previous emission
+    interval: Optional[int] = None  # watermark emission: the event-time
+    #                                 interval this emission closed
+    #                                 (None under cadence emission)
 
 
 def init_state(cfg: RuntimeConfig, key: jax.Array) -> RuntimeState:
@@ -282,19 +295,97 @@ def _emission_key(cfg: RuntimeConfig, state: RuntimeState) -> jax.Array:
     return jax.random.fold_in(keys.reshape(-1, keys.shape[-1])[0], 0xE717)
 
 
+def _window_ctx(cfg: RuntimeConfig, state: RuntimeState, view, stats):
+    """EmissionContext for the grouped (per-key / session) window kinds.
+
+    Sharded states hold identical slot assignments on every shard (all
+    shards consume the same event-time ramp — the ``stamp_sharded``
+    contract), so the slot/interval structure comes from shard 0 while
+    per-key activity pools counts over shards (a key's traffic is spread
+    across them).
+    """
+    from repro.runtime.registry import EmissionContext
+    if cfg.num_shards == 1:
+        slot_interval = state.slot_interval
+        activity = win.activity_mask(state.window)
+    else:
+        window = jax.tree.map(lambda x: x[0], state.window)
+        slot_interval = state.slot_interval[0]
+        counts_any = jnp.any(state.window.intervals.counts > 0, axis=0)
+        activity = win._live_mask(window)[:, None] & counts_any
+    return EmissionContext(
+        num_intervals=cfg.num_intervals, num_strata=cfg.num_strata,
+        num_shards=cfg.num_shards, interval_span=cfg.interval_span,
+        slot_interval=slot_interval, activity=activity,
+        view=view, stats=stats)
+
+
 def _evaluate(cfg: RuntimeConfig, registry: QueryRegistry,
               state: RuntimeState):
     view, stats = _merged_view(cfg, state)
+    ctx = _window_ctx(cfg, state, view, stats)
     results = registry.evaluate_view(view, stats,
-                                     _emission_key(cfg, state))
+                                     _emission_key(cfg, state), ctx=ctx)
     return results, stats
 
 
+def _interval_cell_mask(cfg: RuntimeConfig, state: RuntimeState,
+                        interval: jax.Array) -> jax.Array:
+    """Cell mask of one event interval in the merged view's flat order.
+
+    Interval ``j`` lives in slot ``j mod K``; the mask additionally
+    requires the slot to still HOLD ``j`` (a recycled slot must never
+    leak its new occupant into an older interval's emission — the host
+    guards eviction with a named error, this is the in-graph belt)."""
+    k, s = cfg.num_intervals, cfg.num_strata
+    slot = jnp.mod(interval, k)
+    sel = (jnp.arange(k * s, dtype=jnp.int32) // s) == slot      # [K·S]
+    if cfg.num_shards == 1:
+        return sel & (state.slot_interval[slot] == interval)
+    holds = state.slot_interval[:, slot] == interval             # [W]
+    return (holds[:, None] & sel[None, :]).reshape(-1)
+
+
+def _evaluate_interval(cfg: RuntimeConfig, registry: QueryRegistry,
+                       state: RuntimeState, interval: jax.Array,
+                       base_key: jax.Array):
+    """Watermark-driven emission body: answer every standing query on the
+    CLOSED interval's cells (merged kinds and per-key panes restrict to
+    it; session windows read the full ring via the context).
+
+    ``base_key`` seeds the bootstrap paths, folded with the interval id —
+    NOT with the ring's evolving lead key, whose fold count depends on
+    how many chunks each executor mode had ingested at emission time.
+    A chunk-count-independent key is what makes the two modes' emitted
+    (interval, answer, bounds) sequences bitwise identical.
+    """
+    view, stats = _merged_view(cfg, state)
+    ctx = _window_ctx(cfg, state, view, stats)
+    # Session windows at a close emission cover only CLOSED intervals
+    # (ids <= the closing one): open intervals are still accumulating,
+    # and an emission must answer over final data.  Note their support
+    # is still the ring's CURRENT retention — an executor that ingested
+    # further before emitting (a batched flush) may have evicted older
+    # closed intervals — so session answers are reproducible per mode
+    # (crash recovery is bitwise) but cross-mode bitwise only when the
+    # emission points align; the merged/per-key per-interval answers
+    # below are cadence-independent unconditionally.
+    ctx.activity = ctx.activity & (ctx.slot_interval <= interval)[:, None]
+    iview = win.restrict_view(view, _interval_cell_mask(cfg, state,
+                                                        interval))
+    istats = err.stratum_stats_from_sample(
+        iview.values, iview.counts, iview.taken, iview.slot_mask())
+    key = jax.random.fold_in(base_key, interval)
+    results = registry.evaluate_view(iview, istats, key, ctx=ctx)
+    return results, istats
+
+
 def _apply_controller(cfg: RuntimeConfig, state: RuntimeState,
-                      results, stats, latency_s) -> RuntimeState:
+                      results, stats, latency_s,
+                      intervals: Optional[int] = None) -> RuntimeState:
     realized = (results[cfg.accuracy_query] if cfg.accuracy_query
                 else err.estimate_mean(stats))
-    k = cfg.num_intervals
+    k = cfg.num_intervals if intervals is None else intervals
     if cfg.num_shards > 1:
         # Per-shard controllers see their local stats but share the global
         # realized width and the (replicated) latency signal.
@@ -346,6 +437,21 @@ class _ExecutorBase:
                  checkpointer: Optional[ckp.Checkpointer] = None):
         if len(registry) == 0:
             raise ValueError("register at least one standing query")
+        if cfg.emission not in ("cadence", "watermark"):
+            raise ValueError(
+                f"unknown emission mode {cfg.emission!r}; expected "
+                "'cadence' or 'watermark'")
+        if cfg.emission == "watermark" and (
+                cfg.allowed_lateness
+                >= (cfg.num_intervals - 1) * cfg.interval_span):
+            raise ValueError(
+                "emission='watermark' needs allowed_lateness < "
+                "(num_intervals - 1) * interval_span "
+                f"(got lateness={cfg.allowed_lateness} vs "
+                f"{(cfg.num_intervals - 1) * cfg.interval_span}): an "
+                "interval must close — the watermark must pass its end — "
+                "while its slot is still in the ring, or its answers "
+                "would be evicted before they could ever be emitted")
         if cfg.accuracy_query is not None:
             match = [q for q in registry.queries
                      if q.name == cfg.accuracy_query]
@@ -358,6 +464,12 @@ class _ExecutorBase:
                     f"accuracy_query {cfg.accuracy_query!r} has kind "
                     f"{match[0].kind!r}; the controller's feedback needs "
                     "a scalar linear estimate (sum/mean/count)")
+            if match[0].window != "merged":
+                raise ValueError(
+                    f"accuracy_query {cfg.accuracy_query!r} has window "
+                    f"{match[0].window!r}; the controller's feedback "
+                    "needs a SCALAR estimate (per-key/session answers "
+                    "are per-key vectors)")
         self.cfg = cfg
         self.registry = registry
         registry.freeze()     # traced steps close over the query list
@@ -370,6 +482,32 @@ class _ExecutorBase:
         #                               downstream dedupes re-emissions by)
         self._items_since_emit = 0
         self._last_latency = 0.0
+        # Watermark-driven emission state (host side). The frontier
+        # MIRROR tracks the device frontier from chunk times alone —
+        # reading an input chunk never blocks on the in-flight step, so
+        # the emit/don't-emit decision adds no host sync to the
+        # pipelined hot loop. The base key makes per-interval bootstrap
+        # draws a function of the interval id, not of how many chunks
+        # either executor mode had folded by emission time.
+        self._emit_base_key = jax.random.fold_in(key, 0xE31)
+        self._host_frontier = np.full((cfg.num_shards,), wmk.NEG_TIME,
+                                      np.float32)
+        self._emitted_through = -1    # newest interval already emitted
+        self.emit_trace_count = 0
+        if cfg.emission == "watermark":
+            def emit_iv(state, interval, base_key, latency_s):
+                self.emit_trace_count += 1     # TRACE time only
+                results, istats = _evaluate_interval(
+                    cfg, registry, state, interval, base_key)
+                # Per-window pressure: the realized widths fed back are
+                # the closed interval's own, and the Neyman allocation
+                # is already per interval (intervals=1) — each newly
+                # opened interval adopts a capacity sized for ONE pane.
+                state = _apply_controller(cfg, state, results, istats,
+                                          latency_s, intervals=1)
+                return state, results
+
+            self._emit_interval_fn = jax.jit(emit_iv, donate_argnums=0)
         self._query_fn = jax.jit(
             lambda st: _evaluate(cfg, registry, st)[0])
 
@@ -392,6 +530,10 @@ class _ExecutorBase:
         self._emission_cursor = 0
         self._items_since_emit = 0
         self._last_latency = 0.0
+        self._emit_base_key = jax.random.fold_in(key, 0xE31)
+        self._host_frontier = np.full((self.cfg.num_shards,), wmk.NEG_TIME,
+                                      np.float32)
+        self._emitted_through = -1
         if self.checkpointer is not None:
             # New stream ⇒ the old run's snapshots must not survive as
             # recovery candidates (offset-dedupe would even skip
@@ -436,7 +578,52 @@ class _ExecutorBase:
                 int(state.open_interval), int(wm.on_time),
                 int(wm.late), int(wm.dropped))
 
-    def _record(self, results, latency_s: float) -> Emission:
+    def _advance_frontier(self, chunk: TimestampedChunk) -> None:
+        """Advance the host frontier mirror (chunk buffers only — never
+        blocks on the in-flight ingest step)."""
+        self._host_frontier = wmk.host_frontier(
+            self._host_frontier, chunk.times, chunk.mask)
+
+    def _closed_through(self) -> int:
+        return wmk.host_closed_through(
+            self._host_frontier, self.cfg.allowed_lateness,
+            self.cfg.interval_span)
+
+    def _emit_closed(self, latency_s: float) -> int:
+        """Emit every newly closed interval, oldest first — the
+        watermark-driven emission loop both executors share.
+
+        Exactly-once is the host cursor ``_emitted_through``: each close
+        fires one emission with a monotonic ``Emission.index``, and a
+        restored executor resumes the cursor from its checkpoint so a
+        replayed suffix re-fires the same (interval, index) pairs."""
+        cfg = self.cfg
+        closed = self._closed_through()
+        open_iv = wmk.host_open_interval(self._host_frontier,
+                                         cfg.interval_span)
+        emitted = 0
+        while self._emitted_through < closed:
+            j = self._emitted_through + 1
+            if j <= open_iv - cfg.num_intervals:
+                raise RuntimeError(
+                    f"interval {j} left the ring before the watermark "
+                    f"closed it (open interval {open_iv}, ring holds "
+                    f"{cfg.num_intervals}): one arrival unit advanced "
+                    "the frontier across a whole window, so the closed "
+                    "interval's sample was recycled unemitted — grow "
+                    "num_intervals or shorten the chunk/micro-batch "
+                    "event span")
+            self.state, results = self._emit_interval_fn(
+                self.state, jnp.int32(j), self._emit_base_key,
+                jnp.float32(latency_s))
+            jax.block_until_ready(results)
+            self._record(results, latency_s, interval=j)
+            self._emitted_through = j
+            emitted += 1
+        return emitted
+
+    def _record(self, results, latency_s: float,
+                interval: Optional[int] = None) -> Emission:
         wmark, open_iv, on_time, late, dropped = self._wm_totals(self.state)
         cap = self.state.ctrl.capacity
         if self.cfg.num_shards > 1:
@@ -455,7 +642,7 @@ class _ExecutorBase:
                       watermark=wmark, open_interval=open_iv,
                       on_time=on_time, late=late, dropped=dropped,
                       capacity=cap, latency_s=latency_s,
-                      items=self._items_since_emit)
+                      items=self._items_since_emit, interval=interval)
         self.emissions.append(em)
         self._emission_cursor += 1
         self._items_since_emit = 0
@@ -509,14 +696,26 @@ class BatchedExecutor(_ExecutorBase):
             if cfg.num_shards > 1:
                 ingest = jax.vmap(_ingest_chunk, in_axes=(None, 0, 0))
 
-            def step(state, stacked, latency_prev):
-                def body(st, ch):
-                    return ingest(cfg, st, ch), None
-                state, _ = jax.lax.scan(body, state, stacked)
-                results, stats = _evaluate(cfg, registry, state)
-                state = _apply_controller(cfg, state, results, stats,
-                                          latency_prev)
-                return state, results
+            if cfg.emission == "watermark":
+                # Under watermark-driven emission the micro-batch step is
+                # ingest-only: evaluation + controller move to the
+                # per-interval-close emissions AFTER the flush, so the
+                # emitted answers are a property of event time, not of
+                # where the driver drew its batch boundaries.
+                def step(state, stacked, latency_prev):
+                    def body(st, ch):
+                        return ingest(cfg, st, ch), None
+                    state, _ = jax.lax.scan(body, state, stacked)
+                    return state, None
+            else:
+                def step(state, stacked, latency_prev):
+                    def body(st, ch):
+                        return ingest(cfg, st, ch), None
+                    state, _ = jax.lax.scan(body, state, stacked)
+                    results, stats = _evaluate(cfg, registry, state)
+                    state = _apply_controller(cfg, state, results, stats,
+                                              latency_prev)
+                    return state, results
 
             fn = jax.jit(step, donate_argnums=0).lower(
                 state, stacked, latency_prev).compile()
@@ -540,12 +739,24 @@ class BatchedExecutor(_ExecutorBase):
         if not self._pending:
             return
         stacked = _stack(self._pending)
-        n = len(self._pending)
+        pending, n = self._pending, len(self._pending)
         self._pending = []
         lat = jnp.float32(self._last_latency)
         fn = self._window_step(n, self.state, stacked, lat)
         t0 = time.perf_counter()
         self.state, results = fn(self.state, stacked, lat)
+        if self.cfg.emission == "watermark":
+            jax.block_until_ready(self.state)    # the micro-batch barrier
+            self._last_latency = time.perf_counter() - t0
+            for c in pending:
+                self._advance_frontier(c)
+            closes = self._emit_closed(self._last_latency)
+            if self.cfg.controller.latency_budget_s is not None:
+                self.batch_chunks = ctl.next_batch_chunks(
+                    self.batch_chunks,
+                    float(jnp.max(self.state.ctrl.pressure)),
+                    self.cfg.max_batch_chunks, closes_per_batch=closes)
+            return
         jax.block_until_ready(results)    # the micro-batch barrier
         self._last_latency = time.perf_counter() - t0
         self._record(results, self._last_latency)
@@ -619,7 +830,20 @@ class PipelinedExecutor(_ExecutorBase):
         self._items_since_emit += int(chunk.values.size)
         self._chunks_since_emit += 1
         self.chunks_pushed += 1
-        if self._chunks_since_emit >= self.cfg.emit_every:
+        if self.cfg.emission == "watermark":
+            # The emit decision reads ONLY the chunk's own buffers (host
+            # frontier mirror) — between closes the loop stays
+            # dispatch-only, no sync on the in-flight state.
+            self._advance_frontier(chunk)
+            if self._closed_through() > self._emitted_through:
+                jax.block_until_ready(self.state)   # emission boundary
+                elapsed = time.perf_counter() - self._emit_t0
+                per_chunk = elapsed / max(self._chunks_since_emit, 1)
+                self._last_latency = per_chunk
+                self._emit_closed(per_chunk)
+                self._chunks_since_emit = 0
+                self._emit_t0 = time.perf_counter()
+        elif self._chunks_since_emit >= self.cfg.emit_every:
             self._emit_now()
         if self.checkpointer is not None:
             # Cadence boundary only: capture() blocks on the state, but
@@ -641,6 +865,13 @@ class PipelinedExecutor(_ExecutorBase):
         self._emit_t0 = time.perf_counter()
 
     def finalize(self) -> List[Emission]:
+        if self.cfg.emission == "watermark":
+            # Watermark emission fires exactly at frontier closes, never
+            # at end-of-stream: intervals the watermark hasn't passed
+            # stay unemitted (their provisional answers are available
+            # via ad-hoc ``query()``), so a resumed stream can still
+            # close them exactly once.
+            return self.emissions
         if self._chunks_since_emit:
             self._emit_now()
         return self.emissions

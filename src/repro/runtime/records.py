@@ -95,6 +95,30 @@ def timestamped_stream(aggregator: StreamAggregator, chunk_size: int,
         yield stamp(aggregator.interval_chunk(e, chunk_size), e * span, rate)
 
 
+def silence_key(chunk: TimestampedChunk, key_id: int, active_span: float,
+                silent_span: float) -> TimestampedChunk:
+    """Mask out one stratum key's items during periodic silent phases.
+
+    The key emits for ``active_span`` event-time units, then goes dark
+    for ``silent_span``, repeating — the canonical session-shaped
+    workload (user traffic in bursts separated by gap timeouts).  The
+    silence is a pure function of each item's EVENT TIME, so it is
+    offset-addressable by construction: replaying any stream suffix
+    reproduces exactly the same activity pattern, which the crash
+    sweeps under session windows rely on.  Handles both ``[M]`` and
+    sharded ``[W, M]`` chunks.
+    """
+    if active_span <= 0 or silent_span <= 0:
+        raise ValueError(
+            f"active_span and silent_span must be > 0, got "
+            f"({active_span}, {silent_span})")
+    period = jnp.float32(active_span + silent_span)
+    phase = jnp.mod(chunk.times, period)
+    silent = (phase >= jnp.float32(active_span)) & (
+        chunk.stratum_ids == jnp.int32(key_id))
+    return dataclasses.replace(chunk, mask=chunk.mask & ~silent)
+
+
 def perturb_event_times(chunks: Sequence[TimestampedChunk], key: jax.Array,
                         max_displacement: float,
                         offset: int = 0) -> list[TimestampedChunk]:

@@ -35,6 +35,22 @@ from repro.utils import fold_in_str
 KINDS = ("sum", "mean", "count", "histogram", "quantile",
          "heavy_hitters", "distinct")
 
+#: Window kinds. ``merged`` is the classic K-interval tumbling window
+#: (all cells of the ring, Eq. 5 merge).  ``per_key`` answers per stratum
+#: key: each key's cells stay separate, so the result is a VECTOR
+#: Estimate ``[S]`` — per-key tumbling windows over the same ring (under
+#: watermark-driven emission the evaluation is restricted to the closed
+#: interval, i.e. true per-key tumbling panes).  ``session`` answers per
+#: key over that key's *current gap-timeout session* (see
+#: ``core.window.session_intervals``), also a vector ``[S]``.
+WINDOWS = ("merged", "per_key", "session")
+
+#: Kinds evaluable under per-key / session windows: the linear kinds
+#: (closed-form Eq. 5–9 per group) plus quantile (per-key stratified
+#: bootstrap, vmapped over keys). Heavy hitters / distinct stay
+#: merged-only — their sketches have no per-key decomposition here.
+GROUPED_KINDS = ("sum", "mean", "count", "quantile")
+
 Result = Union[err.Estimate, sk.HeavyHitters]
 
 
@@ -49,6 +65,8 @@ class StandingQuery:
     k: int = 8                             # heavy hitters
     num_replicates: int = 32               # bootstrap replicates
     method: str = "sort"                   # quantile estimator
+    window: str = "merged"                 # merged | per_key | session
+    session_gap: Optional[float] = None    # session gap (event-time units)
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -60,6 +78,61 @@ class StandingQuery:
             raise ValueError("histogram query needs edges=")
         if self.kind == "quantile" and self.qs is None:
             raise ValueError("quantile query needs qs=")
+        if self.window not in WINDOWS:
+            raise ValueError(f"unknown window kind {self.window!r}; "
+                             f"one of {WINDOWS}")
+        if self.window != "merged" and self.kind not in GROUPED_KINDS:
+            raise ValueError(
+                f"{self.kind!r} queries support only the merged window "
+                f"(per_key/session need a per-group estimator; "
+                f"available for {GROUPED_KINDS})")
+        if self.window == "session" and self.session_gap is None:
+            raise ValueError("session window needs session_gap=")
+        if self.session_gap is not None and self.session_gap <= 0:
+            raise ValueError(
+                f"session_gap must be > 0, got {self.session_gap}")
+
+
+@dataclasses.dataclass
+class EmissionContext:
+    """Cell-structure context the grouped window kinds evaluate against.
+
+    The merged :class:`~repro.core.quantile.SampleView` flattens the ring
+    to anonymous cells; per-key and session windows additionally need to
+    know the (shard × interval × stratum) layout, the slots' event
+    interval ids and which cells saw traffic.  Executors build one per
+    emission from live (traced) state — this is NOT a jit boundary type,
+    just a named bundle.
+
+    ``view``/``stats`` here are always the FULL window's shared pass:
+    under watermark-driven emission the base view handed to
+    ``evaluate_view`` is restricted to the closed interval, which is
+    exactly what per-key tumbling panes want, while session windows keep
+    reading the whole ring (a session spans intervals by definition).
+    """
+    num_intervals: int
+    num_strata: int
+    num_shards: int
+    interval_span: float
+    slot_interval: jax.Array     # [K] i32 event interval id per slot
+    activity: jax.Array          # [K, S] bool — live cells with items
+    view: qt.SampleView          # full merged view (unrestricted)
+    stats: err.StratumStats      # full merged stats (unrestricted)
+
+    def gap_intervals(self, session_gap: float) -> int:
+        """Event-time gap resolved to ring-interval granularity."""
+        import math
+        return max(1, int(math.ceil(session_gap / self.interval_span)))
+
+    def key_of_cell(self, num_cells: int) -> jax.Array:
+        """``[G]`` stratum key of each flattened cell (shard-tiled)."""
+        return jnp.arange(num_cells, dtype=jnp.int32) % self.num_strata
+
+    def tile_cells(self, mask_ks: jax.Array) -> jax.Array:
+        """Broadcast a ``[K, S]`` cell mask over shards to ``[G]``."""
+        w = self.num_shards
+        full = jnp.broadcast_to(mask_ks[None], (w,) + mask_ks.shape)
+        return full.reshape(-1)
 
 
 class QueryRegistry:
@@ -98,49 +171,123 @@ class QueryRegistry:
     def __len__(self) -> int:
         return len(self._queries)
 
-    def evaluate(self, window: win.WindowState,
-                 key: jax.Array) -> Dict[str, Result]:
+    def evaluate(self, window: win.WindowState, key: jax.Array,
+                 interval_span: float = 1.0) -> Dict[str, Result]:
         """Answer every registered query from one shared sample pass.
 
         ``key`` seeds the bootstrap paths (folded per query name so
-        adding a query never perturbs another's replicates).
+        adding a query never perturbs another's replicates).  Outside the
+        runtime the slots' event interval ids are unknown, so session
+        windows fall back to recency ranks (``interval_span`` converts
+        the gap); the executors pass real ids via their own context.
         """
         view = win.sample_view(window)                    # THE shared pass
         stats = err.stratum_stats_from_sample(
             view.values, view.counts, view.taken, view.slot_mask())
-        return self.evaluate_view(view, stats, key)
+        k, s = window.intervals.counts.shape
+        slot_interval = jnp.mod(
+            jnp.arange(k, dtype=jnp.int32) - window.cursor,
+            jnp.maximum(k, 1))
+        ctx = EmissionContext(
+            num_intervals=k, num_strata=s, num_shards=1,
+            interval_span=interval_span, slot_interval=slot_interval,
+            activity=win.activity_mask(window), view=view, stats=stats)
+        return self.evaluate_view(view, stats, key, ctx=ctx)
 
     def evaluate_view(self, view: qt.SampleView, stats: err.StratumStats,
-                      key: jax.Array) -> Dict[str, Result]:
+                      key: jax.Array,
+                      ctx: Optional[EmissionContext] = None,
+                      ) -> Dict[str, Result]:
         """Answer every query from an already-materialized shared pass.
 
         The executors call this directly: single-shard emissions pass the
         window's merged view; sharded emissions pass the (shard ×
-        interval × stratum) concatenation (the Eq. 5 merge).
+        interval × stratum) concatenation (the Eq. 5 merge); watermark-
+        driven emissions pass the closed interval's restriction of it.
+        ``ctx`` supplies the cell structure the per-key/session window
+        kinds group by — merged-only registries never need it.
         """
         out: Dict[str, Result] = {}
         for q in self._queries:
-            if q.kind == "sum":
-                out[q.name] = err.estimate_sum(stats)
-            elif q.kind == "mean":
-                out[q.name] = err.estimate_mean(stats)
-            elif q.kind == "count":
-                ind = q.predicate(view.values).astype(jnp.float32)
-                out[q.name] = err.estimate_sum(
-                    err.stratum_stats_from_sample(
-                        ind, view.counts, view.taken, view.slot_mask()))
-            elif q.kind == "histogram":
-                out[q.name] = qt.cell_counts(
-                    view, jnp.asarray(q.edges, jnp.float32))
-            elif q.kind == "quantile":
-                out[q.name] = qt.query_quantile(
-                    view, jnp.asarray(q.qs, jnp.float32), method=q.method,
-                    num_replicates=q.num_replicates,
-                    key=fold_in_str(key, q.name))
-            elif q.kind == "heavy_hitters":
-                out[q.name] = sk.query_heavy_hitters(view, q.k)
-            elif q.kind == "distinct":
-                out[q.name] = sk.query_distinct(
-                    view, num_replicates=q.num_replicates,
-                    key=fold_in_str(key, q.name))
+            if q.window == "merged":
+                out[q.name] = self._eval_merged(q, view, stats, key)
+            else:
+                if ctx is None:
+                    raise ValueError(
+                        f"query {q.name!r} has window={q.window!r}, which "
+                        "needs an EmissionContext (cell structure); "
+                        "evaluate through an executor or "
+                        "QueryRegistry.evaluate")
+                out[q.name] = self._eval_grouped(q, view, key, ctx)
         return out
+
+    def _eval_merged(self, q: StandingQuery, view: qt.SampleView,
+                     stats: err.StratumStats, key: jax.Array) -> Result:
+        if q.kind == "sum":
+            return err.estimate_sum(stats)
+        if q.kind == "mean":
+            return err.estimate_mean(stats)
+        if q.kind == "count":
+            ind = q.predicate(view.values).astype(jnp.float32)
+            return err.estimate_sum(
+                err.stratum_stats_from_sample(
+                    ind, view.counts, view.taken, view.slot_mask()))
+        if q.kind == "histogram":
+            return qt.cell_counts(view, jnp.asarray(q.edges, jnp.float32))
+        if q.kind == "quantile":
+            return qt.query_quantile(
+                view, jnp.asarray(q.qs, jnp.float32), method=q.method,
+                num_replicates=q.num_replicates,
+                key=fold_in_str(key, q.name))
+        if q.kind == "heavy_hitters":
+            return sk.query_heavy_hitters(view, q.k)
+        assert q.kind == "distinct"
+        return sk.query_distinct(view, num_replicates=q.num_replicates,
+                                 key=fold_in_str(key, q.name))
+
+    def _eval_grouped(self, q: StandingQuery, view: qt.SampleView,
+                      key: jax.Array, ctx: EmissionContext) -> Result:
+        """Per-key / session evaluation: restrict, group by key, estimate.
+
+        Per-key windows group the BASE view's cells by stratum key (under
+        watermark emission the base view is already the closed interval —
+        per-key tumbling panes). Session windows restrict the FULL ring
+        to each key's current session first; the session mask is a pure
+        function of ring activity, so nothing beyond the shared pass is
+        touched.
+        """
+        s = ctx.num_strata
+        if q.window == "session":
+            smask = win.session_intervals(
+                ctx.activity, ctx.slot_interval,
+                ctx.gap_intervals(q.session_gap))
+            base = win.restrict_view(ctx.view, ctx.tile_cells(smask))
+        else:
+            base = view
+        gid = ctx.key_of_cell(base.counts.shape[0])
+        gstats = err.stratum_stats_from_sample(
+            base.values, base.counts, base.taken, base.slot_mask())
+        if q.kind == "sum":
+            return err.estimate_sum_grouped(gstats, gid, s)
+        if q.kind == "mean":
+            return err.estimate_mean_grouped(gstats, gid, s)
+        if q.kind == "count":
+            ind = q.predicate(base.values).astype(jnp.float32)
+            return err.estimate_sum_grouped(
+                err.stratum_stats_from_sample(
+                    ind, base.counts, base.taken, base.slot_mask()),
+                gid, s)
+        assert q.kind == "quantile"
+        # Per-key stratified bootstrap: each key keeps its own cells and
+        # replicates (vmapped — one trace for all keys).
+        qs = jnp.asarray(q.qs, jnp.float32)
+
+        def one(key_id, kk):
+            v = win.restrict_view(base, gid == key_id)
+            return qt.query_quantile(v, qs, method=q.method,
+                                     num_replicates=q.num_replicates,
+                                     key=kk)
+
+        keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            fold_in_str(key, q.name), jnp.arange(s))
+        return jax.vmap(one)(jnp.arange(s, dtype=jnp.int32), keys)

@@ -28,6 +28,50 @@ from repro.utils import dataclass_pytree
 _NEG = jnp.float32(-3.0e38)      # -inf stand-in that survives f32 arithmetic
 _IMIN = jnp.int32(-(2 ** 31) + 1)
 
+#: Host-side mirror of ``_NEG``: executors track the event-time frontier
+#: on the host (from chunk times alone — never from device state, so the
+#: pipelined hot loop stays sync-free) and must start from the SAME
+#: sentinel the device frontier starts from, or a restore could disagree
+#: with the live mirror bitwise.
+NEG_TIME = np.float32(-3.0e38)
+
+
+def host_frontier(prev: np.ndarray, times, mask) -> np.ndarray:
+    """Advance a host-side ``[W]`` frontier mirror with one chunk.
+
+    Pure ``numpy.float32`` over the chunk's OWN buffers: reading an input
+    chunk blocks only on data the stream already materialized, never on
+    the in-flight ingest step, which is what lets watermark-driven
+    emission make its emit/don't-emit decision without adding a host
+    sync to the pipelined hot loop.  Mirrors ``route_chunk``'s frontier
+    update exactly (masked max, f32).
+    """
+    t = np.asarray(times, np.float32)
+    m = np.asarray(mask, bool)
+    if t.ndim == 1:
+        t, m = t[None, :], m[None, :]
+    chunk_max = np.max(np.where(m, t, NEG_TIME), axis=1).astype(np.float32)
+    return np.maximum(prev, chunk_max)
+
+
+def host_closed_through(frontier: np.ndarray, allowed_lateness: float,
+                        span: float) -> int:
+    """Newest event interval the watermark has CLOSED, given a ``[W]``
+    frontier mirror (min over shards: an interval is final only once no
+    shard can accept items for it).  Interval ``j`` closes when the
+    watermark reaches its close time ``(j+1)·span``.  All arithmetic in
+    ``float32`` to match the device watermark bitwise."""
+    w = np.float32(np.min(frontier)) - np.float32(allowed_lateness)
+    return int(np.floor(w / np.float32(span))) - 1
+
+
+def host_open_interval(frontier: np.ndarray, span: float) -> int:
+    """Newest event interval seen, from the host frontier mirror (the
+    max item time's interval — matches ``route_chunk``'s open, which
+    starts at 0 and only moves forward)."""
+    return max(0, int(np.floor(np.float32(np.max(frontier))
+                               / np.float32(span))))
+
 
 @dataclass_pytree
 @dataclasses.dataclass

@@ -51,6 +51,13 @@ class ReplayableStream:
     num_shards: int = 1
     disorder: float = 0.0      # max backward event-time displacement
     disorder_seed: int = 0
+    #: Session-shaped activity: tuples ``(key_id, active_span,
+    #: silent_span)`` — each named stratum key emits in bursts of
+    #: ``active_span`` event-time units separated by ``silent_span`` of
+    #: silence (``records.silence_key``).  Silence is a pure function of
+    #: event time (applied AFTER disorder, on the final times), so the
+    #: pattern replays identically from any offset.
+    key_gaps: tuple = ()
 
     @property
     def span(self) -> float:
@@ -76,6 +83,8 @@ class ReplayableStream:
             c = rec.perturb_event_times(
                 [c], jax.random.PRNGKey(self.disorder_seed),
                 self.disorder, offset=offset)[0]
+        for key_id, active_span, silent_span in self.key_gaps:
+            c = rec.silence_key(c, key_id, active_span, silent_span)
         return c
 
     def range(self, start: int, stop: int) -> Iterator:

@@ -65,6 +65,7 @@ def assert_emission_equal(a, b):
     """Bitwise emission equality (answers, widths, accounting, capacity)
     — everything except wall-clock latency."""
     assert a.index == b.index, (a.index, b.index)
+    assert a.interval == b.interval, (a.interval, b.interval)
     assert set(a.results) == set(b.results)
     for name in a.results:
         ra, rb = a.results[name], b.results[name]

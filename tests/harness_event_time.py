@@ -1,0 +1,211 @@
+"""Event-time oracle harness — the executable spec of watermark-driven
+emission and the session / per-key window kinds.
+
+Everything here is **pure numpy**, written against the event-time
+SEMANTICS (Flink-style bounded-lateness watermarks, interval close =
+watermark passes the interval's end, interval-granular gap sessions,
+per-key cell routing) rather than against the runtime's jnp code — an
+independent reimplementation the randomized property sweeps in
+``tests/test_event_time.py`` compare the real executors against:
+
+* :func:`oracle_run` — walks a chunk stream once and produces the full
+  ground truth: on-time/late/dropped accounting, the per-(interval ×
+  stratum) accepted sums/counts (per-key routing), and the **emission
+  schedule** — for every interval close, the 0-based index of the chunk
+  whose arrival pushed the watermark past that interval's end.
+* :func:`session_mask_oracle` — per-key current-session membership over
+  a ring of interval slots (mirror of ``core.window.session_intervals``).
+* :func:`random_stream` — randomized disordered stream generator with a
+  fixed chunk shape (so property sweeps reuse one compiled executor) but
+  random length, arrival rate, disorder bound, payloads and drop mask.
+* :func:`run_tracking_emissions` — drives a real executor and records
+  the push index at which each emission fired, the observable the
+  "emitted exactly once, at frontier-close" claim is asserted on.
+
+Float discipline: every event-time comparison is ``np.float32``, the
+same width the device watermark uses, so interval-close boundaries land
+on exactly the same side in oracle and runtime.
+"""
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.records import TimestampedChunk
+
+NEG = np.float32(-3.0e38)       # the runtime's -inf stand-in
+
+
+# ---------------------------------------------------------------------------
+# The oracle.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OracleRun:
+    """Ground truth for one stream under one event-time configuration."""
+    on_time: int
+    late: int
+    dropped: int
+    #: Emission schedule: ``(chunk_index, interval)`` per interval close,
+    #: in firing order — chunk_index is the 0-based arrival whose
+    #: frontier advance closed the interval.
+    closes: List[Tuple[int, int]]
+    #: Per-interval per-key ground truth over ACCEPTED items.
+    interval_sums: Dict[int, np.ndarray]     # interval -> [S] f32
+    interval_counts: Dict[int, np.ndarray]   # interval -> [S] int64
+    frontier: np.ndarray                     # [W] final f32 frontier
+
+
+def oracle_run(chunks, span, lateness, num_intervals,
+               num_strata) -> OracleRun:
+    """Pure-numpy walk of the stream: accounting + routing + closes."""
+    first = np.asarray(chunks[0].times, np.float32)
+    w = first.shape[0] if first.ndim == 2 else 1
+    frontier = np.full((w,), NEG, np.float32)
+    open_iv = np.zeros((w,), np.int64)
+    on_time = late = dropped = 0
+    sums: Dict[int, np.ndarray] = {}
+    counts: Dict[int, np.ndarray] = {}
+    closes: List[Tuple[int, int]] = []
+    emitted_through = -1
+
+    for e, c in enumerate(chunks):
+        t = np.asarray(c.times, np.float32)
+        v = np.asarray(c.values, np.float32)
+        s = np.asarray(c.stratum_ids, np.int64)
+        m = np.asarray(c.mask, bool)
+        if t.ndim == 1:
+            t, v, s, m = (x[None, :] for x in (t, v, s, m))
+        for row in range(w):
+            wmark = frontier[row] - np.float32(lateness)   # pre-chunk
+            tgt = np.floor(t[row] / np.float32(span)).astype(np.int64)
+            masked_tgt = tgt[m[row]]
+            new_open = open_iv[row]
+            if masked_tgt.size:
+                new_open = max(new_open, int(masked_tgt.max()))
+            oldest = new_open - num_intervals + 1
+            accept = m[row] & ~(t[row] < wmark) & ~(tgt < oldest)
+            on_time += int(np.sum(accept & (tgt >= open_iv[row])))
+            late += int(np.sum(accept & (tgt < open_iv[row])))
+            dropped += int(np.sum(m[row] & ~accept))
+            for iv in np.unique(tgt[accept]):
+                iv = int(iv)
+                sel = accept & (tgt == iv)
+                sums.setdefault(iv, np.zeros(num_strata, np.float64))
+                counts.setdefault(iv, np.zeros(num_strata, np.int64))
+                np.add.at(sums[iv], s[row][sel], v[row][sel])
+                np.add.at(counts[iv], s[row][sel], 1)
+            masked_t = t[row][m[row]]
+            if masked_t.size:
+                frontier[row] = np.float32(
+                    max(frontier[row], np.float32(masked_t.max())))
+            open_iv[row] = new_open
+        # Interval j closes when the watermark — min over shards —
+        # reaches its end (j+1)·span; one chunk can close several.
+        wm = np.float32(frontier.min()) - np.float32(lateness)
+        closed = int(np.floor(wm / np.float32(span))) - 1
+        while emitted_through < closed:
+            emitted_through += 1
+            closes.append((e, emitted_through))
+    return OracleRun(on_time=on_time, late=late, dropped=dropped,
+                     closes=closes,
+                     interval_sums={k: v.astype(np.float32)
+                                    for k, v in sums.items()},
+                     interval_counts=counts, frontier=frontier)
+
+
+def session_mask_oracle(activity: np.ndarray, slot_interval: np.ndarray,
+                        gap_intervals: int) -> np.ndarray:
+    """Per-key current-session membership, walked the obvious way.
+
+    For each key independently: order the ring's slots newest interval
+    first, start the session at the key's newest active slot, extend it
+    while consecutive active intervals are at most ``gap_intervals``
+    apart, and cut it at the first active interval beyond the gap
+    (anything older is a previous session). Returns ``[K, S]`` bool.
+    """
+    k, s = activity.shape
+    order = np.argsort(-slot_interval, kind="stable")
+    mask = np.zeros((k, s), bool)
+    for key in range(s):
+        last = None
+        for slot in order:
+            if not activity[slot, key]:
+                continue
+            iv = int(slot_interval[slot])
+            if last is None:
+                mask[slot, key] = True
+                last = iv
+            elif last - iv <= gap_intervals:
+                mask[slot, key] = True
+                last = iv
+            else:
+                break
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Randomized stream generator (fixed chunk shape — compiled-step reuse).
+# ---------------------------------------------------------------------------
+
+def random_stream(rng: np.random.Generator, num_strata: int,
+                  chunk_size: int = 48, min_chunks: int = 8,
+                  max_chunks: int = 12,
+                  max_disorder: float = 0.6) -> List[TimestampedChunk]:
+    """One randomized disordered stream: random length, arrival rate,
+    disorder bound, stratum routing, payloads, and a sprinkling of
+    masked (dead) lanes.  Chunk SHAPE is fixed so a property sweep can
+    drive one warm executor through all examples without retracing."""
+    num_chunks = int(rng.integers(min_chunks, max_chunks + 1))
+    rate = float(rng.uniform(1.2, 3.5)) * chunk_size   # items / time unit
+    disorder = float(rng.uniform(0.0, max_disorder))
+    chunks = []
+    for e in range(num_chunks):
+        base = (e * chunk_size + np.arange(chunk_size)) / np.float32(rate)
+        shift = rng.uniform(0.0, disorder, chunk_size).astype(np.float32)
+        times = np.maximum(base.astype(np.float32) - shift,
+                           np.float32(0.0)).astype(np.float32)
+        values = rng.gamma(2.0, 50.0, chunk_size).astype(np.float32)
+        sids = rng.integers(0, num_strata, chunk_size).astype(np.int32)
+        mask = rng.uniform(size=chunk_size) > 0.05
+        chunks.append(TimestampedChunk(
+            values=jnp.asarray(values), stratum_ids=jnp.asarray(sids),
+            times=jnp.asarray(times), mask=jnp.asarray(mask)))
+    return chunks
+
+
+# ---------------------------------------------------------------------------
+# Driving a real executor while watching WHEN emissions fire.
+# ---------------------------------------------------------------------------
+
+def run_tracking_emissions(ex, chunks):
+    """Push the stream and record, per emission, the 0-based push index
+    at which it fired (``None`` for emissions only finalize() produced).
+    Returns ``(emissions, fired_at)``."""
+    fired_at: List[Optional[int]] = []
+    for e, c in enumerate(chunks):
+        ex.push(c)
+        while len(fired_at) < len(ex.emissions):
+            fired_at.append(e)
+    emissions = ex.finalize()
+    while len(fired_at) < len(emissions):
+        fired_at.append(None)
+    return emissions, fired_at
+
+
+def expected_fire_index(chunk_index: int, mode: str, batch_chunks: int,
+                        num_chunks: int) -> Optional[int]:
+    """Where a close at ``chunk_index`` must surface, per executor mode.
+
+    Pipelined emits at the closing chunk itself. Batched emits at the
+    micro-batch flush that CONTAINS the closing chunk — the next
+    multiple of ``batch_chunks`` (or finalize's tail flush, reported as
+    ``None`` by :func:`run_tracking_emissions` when the tail is ragged).
+    """
+    if mode == "pipelined":
+        return chunk_index
+    boundary = ((chunk_index // batch_chunks) + 1) * batch_chunks - 1
+    if boundary >= num_chunks:
+        return None                     # tail flush inside finalize()
+    return boundary

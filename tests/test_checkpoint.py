@@ -165,6 +165,150 @@ def test_soak_crash_with_late_arrivals_crossing_crash_point(make, key):
 
 
 # ---------------------------------------------------------------------------
+# Watermark-driven emission + session/per-key windows across a crash:
+# interval closes are part of the answer stream now, so recovery must
+# re-fire exactly the same (interval, index) emissions — never skipping
+# a close, never double-firing one.
+# ---------------------------------------------------------------------------
+
+def _wm_registry():
+    return (QueryRegistry()
+            .register("total", "sum")
+            .register("avg", "mean")
+            .register("p", "quantile", qs=(0.5, 0.9), num_replicates=8)
+            .register("key_sum", "sum", window="per_key")
+            .register("sess", "sum", window="session", session_gap=0.75))
+
+
+@pytest.mark.parametrize("make", MODES, ids=lambda m: m.mode)
+def test_crash_sweep_watermark_emission_bitwise(make, key):
+    """Kill after chunk k for EVERY k under emission='watermark' (with
+    per-key and session standing queries riding along): the recovered
+    emission stream — interval ids, indices, answers, bounds — must be
+    bitwise the uninterrupted run's."""
+    n = 8
+    stream = _stream(num_chunks=n, seed=61)
+    cfg, reg = _cfg(emission="watermark"), _wm_registry()
+    reference, _, _ = sweep_crash_points(
+        make_victim=lambda: make(cfg, reg, key),
+        make_recovery=lambda: make(cfg, reg, jax.random.PRNGKey(999)),
+        stream=stream, num_chunks=n, crash_points=range(1, n),
+        every_chunks=3, key=key)
+    # The sweep is only meaningful if closes actually fired and carry
+    # interval tags + per-key vectors.
+    assert [em.interval for em in reference] == \
+        sorted({em.interval for em in reference})
+    assert len(reference) >= 2
+    assert np.asarray(reference[-1].results["key_sum"].value).shape == (3,)
+
+
+@pytest.mark.parametrize("make", MODES, ids=lambda m: m.mode)
+def test_crash_sweep_watermark_sessionized_stream(make, key):
+    """Crash sweep over a session-shaped stream (key 1 bursting) under
+    watermark emission: the session window's per-key answers recover
+    bitwise too (silence is a pure function of event time, so replay
+    regenerates the same activity pattern)."""
+    n, chunk = 10, 96
+    stream = ReplayableStream(
+        StreamAggregator(GaussianSource(), seed=62),
+        chunk_size=chunk, rate=chunk / 0.5,       # 2 chunks per interval
+        disorder=0.2, disorder_seed=5, key_gaps=((1, 1.0, 1.5),))
+    cfg = _cfg(emission="watermark", interval_span=0.5,
+               allowed_lateness=0.25, num_intervals=8)
+    reg = _wm_registry()
+    reference, _, _ = sweep_crash_points(
+        make_victim=lambda: make(cfg, reg, key),
+        make_recovery=lambda: make(cfg, reg, jax.random.PRNGKey(999)),
+        stream=stream, num_chunks=n, crash_points=(1, 3, 4, 6, 8, 9),
+        every_chunks=3, key=key)
+    sess = np.asarray(reference[-1].results["sess"].value)
+    assert sess.shape == (3,) and np.isfinite(sess).all()
+
+
+def test_watermark_emitted_through_cursor_survives_restore(key):
+    """The emitted-through cursor is the exactly-once frontier state: a
+    restore mid-stream must resume it (and the emission base key), so
+    the replayed suffix re-fires the SAME closes at the same indices."""
+    n = 8
+    stream = _stream(num_chunks=n, seed=63)
+    cfg, reg = _cfg(emission="watermark"), _wm_registry()
+    victim = PipelinedExecutor(cfg, reg, key)
+    recovery = PipelinedExecutor(cfg, reg, jax.random.PRNGKey(7))
+    pre, ckpt, rec = crash_and_recover(victim, recovery, stream, n,
+                                       crash_after=6, every_chunks=3,
+                                       key=key)
+    assert ckpt.emitted_through >= 0          # a close preceded the ckpt
+    assert ckp.peek(ckp.to_bytes(ckpt))["emitted_through"] == \
+        ckpt.emitted_through
+    # The first recovered emission continues AFTER the snapshotted
+    # cursor — intervals emitted before the snapshot don't re-fire.
+    post_restore = [em.interval for em in rec
+                    if em.index >= ckpt.emissions_done]
+    assert post_restore and post_restore[0] == ckpt.emitted_through + 1
+    reference = PipelinedExecutor(cfg, reg, key).run(stream.prefix(n))
+    assert_exactly_once(reference, pre, ckpt, rec)
+
+
+def test_restore_rejects_emission_mode_and_session_gap_drift(key):
+    """Emission mode and session-gap parameters are answer-stream
+    semantics: the same Emission.index would name a different window, so
+    a cross-mode (or cross-gap) restore is refused by fingerprint."""
+    stream = _stream(num_chunks=4, seed=64)
+    reg = _wm_registry()
+    ex = PipelinedExecutor(_cfg(emission="watermark"), reg, key)
+    for c in stream.prefix(4):
+        ex.push(c)
+    snap = ex.snapshot()
+    other = PipelinedExecutor(_cfg(emission="cadence"), reg, key)
+    with pytest.raises(ValueError, match="emission"):
+        other.restore(snap)
+    # Same query names/kinds, different session gap ⇒ different windows.
+    reg_gap = (QueryRegistry()
+               .register("total", "sum")
+               .register("avg", "mean")
+               .register("p", "quantile", qs=(0.5, 0.9), num_replicates=8)
+               .register("key_sum", "sum", window="per_key")
+               .register("sess", "sum", window="session", session_gap=2.0))
+    other2 = PipelinedExecutor(_cfg(emission="watermark"), reg_gap, key)
+    with pytest.raises(ValueError, match="queries"):
+        other2.restore(snap)
+    # ... and window-kind drift under the same name is refused too.
+    reg_win = (QueryRegistry()
+               .register("total", "sum")
+               .register("avg", "mean")
+               .register("p", "quantile", qs=(0.5, 0.9), num_replicates=8)
+               .register("key_sum", "sum")
+               .register("sess", "sum", window="session", session_gap=0.75))
+    other3 = PipelinedExecutor(_cfg(emission="watermark"), reg_win, key)
+    with pytest.raises(ValueError, match="queries"):
+        other3.restore(snap)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("make", MODES, ids=lambda m: m.mode)
+def test_soak_crash_watermark_out_of_order(make, key):
+    """OOO soak under watermark emission: disorder beyond the lateness
+    budget, late arrivals crossing crash points, closes firing between
+    checkpoints — every sampled crash point recovers bitwise."""
+    n, chunk = 48, 256
+    stream = _stream(num_chunks=n, chunk_size=chunk, seed=65,
+                     disorder=0.35, disorder_seed=9)
+    cfg = _cfg(capacity=128, allowed_lateness=0.3, batch_chunks=6,
+               emission="watermark")
+    reg = (QueryRegistry().register("total", "sum")
+           .register("key_sum", "sum", window="per_key")
+           .register("p", "quantile", qs=(0.5, 0.9), num_replicates=8))
+    reference, _, _ = sweep_crash_points(
+        make_victim=lambda: make(cfg, reg, key),
+        make_recovery=lambda: make(cfg, reg, jax.random.PRNGKey(999)),
+        stream=stream, num_chunks=n, crash_points=range(2, n, 5),
+        every_chunks=5, key=key)
+    assert len(reference) >= 2
+    final = reference[-1]
+    assert final.late > 0 and final.dropped > 0     # soak really soaked
+
+
+# ---------------------------------------------------------------------------
 # Determinism regressions: replay + sources (suffix replay can't drift).
 # ---------------------------------------------------------------------------
 

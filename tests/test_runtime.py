@@ -301,6 +301,23 @@ def test_next_batch_chunks_quantized():
     assert ctl.next_batch_chunks(4, pressure=2.0, max_batch_chunks=6) == 6
 
 
+def test_next_batch_chunks_per_window_pressure():
+    """Watermark mode's per-window pressure: >1 interval close per
+    micro-batch means the batch barrier paces emissions — the batch
+    halves even when throughput pressure says grow; one (or zero)
+    closes per batch leaves the throughput logic in charge."""
+    assert ctl.next_batch_chunks(8, pressure=2.0, max_batch_chunks=32,
+                                 closes_per_batch=2) == 4
+    assert ctl.next_batch_chunks(8, pressure=0.8, max_batch_chunks=32,
+                                 closes_per_batch=3) == 4
+    assert ctl.next_batch_chunks(1, pressure=0.8, max_batch_chunks=32,
+                                 closes_per_batch=4) == 1   # floor
+    assert ctl.next_batch_chunks(4, pressure=2.0, max_batch_chunks=32,
+                                 closes_per_batch=1) == 8
+    assert ctl.next_batch_chunks(4, pressure=0.8, max_batch_chunks=32,
+                                 closes_per_batch=0) == 4
+
+
 # ---------------------------------------------------------------------------
 # Executors end-to-end.
 # ---------------------------------------------------------------------------

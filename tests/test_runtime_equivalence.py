@@ -110,6 +110,124 @@ def _numpy_watermark_oracle(chunks, span, lateness, num_intervals):
     return on_time, late, dropped
 
 
+# ---------------------------------------------------------------------------
+# Watermark-driven emission: modes must emit the same (interval, answer,
+# bounds) SEQUENCE bitwise.  The watermark/on-time counters recorded on
+# each emission legitimately differ between modes — a micro-batch system
+# emits a close at its flush, by which time more chunks are ingested —
+# but the closed interval's cells are FINAL at close, so the merged and
+# per-key per-interval answers are not allowed to differ by a single
+# bit, at ANY cadence.  Session windows are the one documented
+# exception: their support is the ring's current retention (a later
+# flush may have evicted older closed intervals), so they are bitwise
+# across modes only when the emission points align (batch_chunks=1) —
+# asserted separately below.
+# ---------------------------------------------------------------------------
+
+def _wm_registry():
+    return (QueryRegistry()
+            .register("total", "sum")
+            .register("avg", "mean")
+            .register("big", "count", predicate=lambda x: x > 500.0)
+            .register("p", "quantile", qs=(0.5, 0.9), num_replicates=8)
+            .register("key_sum", "sum", window="per_key")
+            .register("sess", "mean", window="session", session_gap=1.0))
+
+
+def _assert_interval_sequence_equal(eb, ep, skip=()):
+    assert [em.interval for em in eb] == [em.interval for em in ep]
+    assert [em.index for em in eb] == [em.index for em in ep]
+    for a, b in zip(eb, ep):
+        ra_all = {n: r for n, r in a.results.items() if n not in skip}
+        rb_all = {n: r for n, r in b.results.items() if n not in skip}
+        _assert_results_equal(ra_all, rb_all)
+        for name, ra in ra_all.items():
+            rb = rb_all[name]
+            if not hasattr(ra, "keys"):
+                np.testing.assert_array_equal(          # the Eq. 5–9 widths
+                    np.asarray(ra.error_bound(0.95)),
+                    np.asarray(rb.error_bound(0.95)), err_msg=name)
+
+
+def test_watermark_modes_emit_identical_interval_sequence(key):
+    """Deliberately MISALIGNED driver cadences (batch_chunks=3 vs a
+    pipelined per-chunk loop): emissions are a property of event time,
+    so the (interval, answer, bounds) sequences still agree bitwise."""
+    agg = StreamAggregator(GaussianSource(), seed=15)
+    chunks = list(timestamped_stream(agg, 256, 16, 1024.0))
+    cfg = _cfg(emission="watermark", batch_chunks=3)
+    reg = _wm_registry()
+    eb = BatchedExecutor(cfg, reg, key).run(chunks)
+    ep = PipelinedExecutor(cfg, reg, key).run(chunks)
+    assert len(eb) >= 3
+    _assert_interval_sequence_equal(eb, ep, skip=("sess",))
+
+
+def test_watermark_modes_identical_at_aligned_cadence(key):
+    """With batch_chunks=1 the batched executor flushes at every arrival
+    — emission points coincide exactly, so the WHOLE result set
+    (including the retention-dependent session windows) is bitwise
+    mode-equivalent."""
+    agg = StreamAggregator(GaussianSource(), seed=15)
+    chunks = list(timestamped_stream(agg, 256, 16, 1024.0))
+    cfg = _cfg(emission="watermark", batch_chunks=1)
+    reg = _wm_registry()
+    eb = BatchedExecutor(cfg, reg, key).run(chunks)
+    ep = PipelinedExecutor(cfg, reg, key).run(chunks)
+    assert len(eb) >= 3
+    _assert_interval_sequence_equal(eb, ep)          # nothing skipped
+
+
+def test_watermark_modes_identical_sharded(key):
+    from repro.runtime import stamp_sharded
+    agg = StreamAggregator(GaussianSource(), seed=16)
+    chunks = [stamp_sharded(agg.sharded_interval(e, 4, 128), e * 0.5,
+                            128 / 0.5) for e in range(12)]
+    cfg = _cfg(emission="watermark", num_shards=4, interval_span=0.5,
+               allowed_lateness=0.25, batch_chunks=3)
+    reg = _wm_registry()
+    eb = BatchedExecutor(cfg, reg, key).run(chunks)
+    ep = PipelinedExecutor(cfg, reg, key).run(chunks)
+    assert len(eb) >= 3
+    _assert_interval_sequence_equal(eb, ep, skip=("sess",))
+
+
+@pytest.mark.slow
+def test_soak_watermark_out_of_order_equivalence(key):
+    """OOO soak under watermark emission: bounded disorder beyond the
+    lateness budget, misaligned cadences — the emitted interval sequence
+    stays bitwise mode-equivalent and every close fires exactly once."""
+    agg = StreamAggregator(GaussianSource(), seed=18)
+    chunks = list(timestamped_stream(agg, 512, 60, 4096.0))
+    chunks = perturb_event_times(chunks, jax.random.fold_in(key, 3),
+                                 max_displacement=0.35)
+    cfg = _cfg(emission="watermark", allowed_lateness=0.3, batch_chunks=7)
+    reg = _wm_registry()
+    eb = BatchedExecutor(cfg, reg, key).run(chunks)
+    ep = PipelinedExecutor(cfg, reg, key).run(chunks)
+    intervals = [em.interval for em in ep]
+    assert intervals == sorted(set(intervals))      # once each, in order
+    assert len(intervals) >= 5
+    _assert_interval_sequence_equal(eb, ep, skip=("sess",))
+
+
+@pytest.mark.slow
+def test_soak_watermark_sharded_out_of_order_equivalence(key):
+    from repro.runtime import stamp_sharded
+    agg = StreamAggregator(GaussianSource(), seed=19)
+    chunks = [stamp_sharded(agg.sharded_interval(e, 2, 256), e * 0.25,
+                            256 / 0.25) for e in range(40)]
+    chunks = perturb_event_times(chunks, jax.random.fold_in(key, 4),
+                                 max_displacement=0.2)
+    cfg = _cfg(emission="watermark", num_shards=2, interval_span=0.25,
+               allowed_lateness=0.2, num_intervals=8, batch_chunks=5)
+    reg = _wm_registry()
+    eb = BatchedExecutor(cfg, reg, key).run(chunks)
+    ep = PipelinedExecutor(cfg, reg, key).run(chunks)
+    assert len(eb) >= 5
+    _assert_interval_sequence_equal(eb, ep, skip=("sess",))
+
+
 @pytest.mark.slow
 def test_soak_out_of_order_equivalence_and_accounting(key):
     """Soak: 60 chunks with bounded disorder. Modes stay identical and

@@ -76,3 +76,71 @@ def test_window_jit_slide(key):
 
     w, v = step(w, iv)
     assert np.isfinite(float(v))
+
+
+# ---------------------------------------------------------------------------
+# Window kinds beyond the merged ring: per-key + gap sessions.
+# ---------------------------------------------------------------------------
+
+def _keyed_interval(key, sums_per_key, m=120, cap=512):
+    """One interval with per-key sums pinned for exact checks: key k's
+    items are all `base_k` so its sum is count * base_k."""
+    s = len(sums_per_key)
+    sid = jnp.arange(m, dtype=jnp.int32) % s
+    x = jnp.asarray(sums_per_key, jnp.float32)[sid]
+    st_ = oasrs.init(s, cap, SPEC, key)
+    per_key = np.asarray(
+        [float(sums_per_key[k]) * int(np.sum(np.asarray(sid) == k))
+         for k in range(s)])
+    return oasrs.update_chunk(st_, sid, x), per_key
+
+
+def test_query_per_key_sum_exact(key):
+    w = window.init(3, 2, 512, SPEC, key)
+    want = np.zeros(2)
+    for e, vals in enumerate(((10.0, 1.0), (20.0, 2.0))):
+        iv, per_key = _keyed_interval(jax.random.fold_in(key, e), vals)
+        w = window.slide(w, iv)
+        want += per_key
+    got = window.query_per_key_sum(w)
+    np.testing.assert_allclose(np.asarray(got.value), want, rtol=1e-5)
+    # Full take ⇒ exact ⇒ zero Eq. 6 variance per key.
+    np.testing.assert_array_equal(np.asarray(got.variance), [0.0, 0.0])
+
+
+def test_query_session_sum_gap_cuts_old_burst(key):
+    """Ring of 4 intervals; key 0 active in every interval, key 1 only
+    in the oldest and newest — with gap 1 the stale burst is cut from
+    key 1's current session, with gap 3 it is included."""
+    w = window.init(4, 2, 512, SPEC, key)
+    per = []
+    for e, vals in enumerate(((5.0, 7.0), (5.0, 0.0), (5.0, 0.0),
+                              (5.0, 11.0))):
+        iv, per_key = _keyed_interval(jax.random.fold_in(key, e), vals)
+        if vals[1] == 0.0:     # silence key 1: zero its items' mask
+            iv = iv.__class__(values=iv.values, counts=iv.counts.at[1].set(0),
+                              capacity=iv.capacity, key=iv.key)
+        w = window.slide(w, iv)
+        per.append(per_key)
+    slot_interval = jnp.arange(4, dtype=jnp.int32)     # cursor wrapped to 0
+    tight = window.query_session_sum(w, gap_intervals=1,
+                                     slot_interval=slot_interval)
+    loose = window.query_session_sum(w, gap_intervals=3,
+                                     slot_interval=slot_interval)
+    # Key 0: contiguous activity — same either way.
+    np.testing.assert_allclose(float(tight.value[0]),
+                               sum(p[0] for p in per), rtol=1e-5)
+    # Key 1: newest burst only under the tight gap; both under the loose.
+    np.testing.assert_allclose(float(tight.value[1]), per[3][1], rtol=1e-5)
+    np.testing.assert_allclose(float(loose.value[1]),
+                               per[0][1] + per[3][1], rtol=1e-5)
+
+
+def test_session_intervals_jits_and_orders(key):
+    act = jnp.asarray([[True], [False], [True], [True]])
+    ids = jnp.asarray([7, 6, 5, 4], jnp.int32)       # slot 0 newest
+    got = jax.jit(window.session_intervals,
+                  static_argnames="gap_intervals")(act, ids, 1)
+    # Newest active is id 7; next active id 5 is 2 > gap away — cut.
+    np.testing.assert_array_equal(np.asarray(got)[:, 0],
+                                  [True, False, False, False])
