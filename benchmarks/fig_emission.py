@@ -16,6 +16,11 @@ past ``j``'s close by the time its answer first surfaced:
   whose watermark covers ``j``'s close (the answer sat inside the ring,
   finished, until the driver loop got around to emitting).
 
+Every run records a structured event log (``repro.obs``) and BOTH
+staleness and accuracy are reduced from it by the same
+``repro.obs.export`` series the ``summarize`` CLI uses — the figure and
+the operator report literally share the measurement code.
+
 Rows (CSV: ``name,us_per_call,derived``):
 
 * ``fig_emission.cadence.emit<E>`` — per-push wall time; derived
@@ -43,6 +48,8 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.common import emit
+from repro.obs import EventLog, Telemetry
+from repro.obs import export as obx
 from repro.runtime import (BatchedExecutor, PipelinedExecutor,
                            QueryRegistry, RuntimeConfig)
 from repro.stream import GaussianSource, ReplayableStream, StreamAggregator
@@ -56,29 +63,27 @@ def _registry():
 
 
 def _timed_run(ex, chunks):
+    """Timed full run with a FRESH event log attached (post-warm, so the
+    warm run's events never pollute the timed log)."""
+    log = EventLog()
+    ex.attach_telemetry(Telemetry(log))
     t0 = time.perf_counter()
     for c in chunks:
         ex.push(c)
-    ems = ex.finalize()
-    return ems, time.perf_counter() - t0
+    ex.finalize()
+    return log, time.perf_counter() - t0
 
 
-def _staleness(emissions, closed_intervals, span):
-    """Per closed interval: frontier progress past its close at the
-    first emission whose watermark covers it."""
-    out = []
-    for j in closed_intervals:
-        close = np.float32((j + 1) * span)
-        for em in emissions:
-            if np.float32(em.watermark) >= close:
-                out.append(float(np.float32(em.watermark) - close))
-                break
-    return out
-
-
-def _half_width(emissions):
-    return float(np.mean([float(em.results["avg"].error_bound(0.95))
-                          for em in emissions]))
+def _row(name, log, wall, num_chunks, closed):
+    """One CSV row, every derived quantity reduced from the event log."""
+    st = obx.staleness_series(log.events, intervals=closed)
+    hw = float(np.mean(obx.half_width_series(log.events, "avg")))
+    emissions = len(log.of_type("emission"))
+    return float(np.mean(st)), emit(
+        name, wall / num_chunks * 1e6,
+        f"staleness_mean={np.mean(st):.3f};"
+        f"staleness_max={np.max(st):.3f};emissions={emissions};"
+        f"hw={hw:.4f}")
 
 
 def run(quick: bool | None = None) -> list:
@@ -104,11 +109,12 @@ def run(quick: bool | None = None) -> list:
         base.update(kw)
         return RuntimeConfig(**base)
 
-    # Ground truth: which intervals close within the stream.
+    # Ground truth: which intervals close within the stream — read off
+    # the probe run's watermark_close events.
     wm_probe = PipelinedExecutor(cfg(emission="watermark"), _registry(),
                                  key)
-    probe_ems, _ = _timed_run(wm_probe, chunks)
-    closed = [em.interval for em in probe_ems]
+    probe_log, _ = _timed_run(wm_probe, chunks)
+    closed = obx.closed_intervals(probe_log.events)
 
     rows = []
     cadence_staleness = []
@@ -117,15 +123,11 @@ def run(quick: bool | None = None) -> list:
                                _registry(), key)
         ex.run(chunks[:every])                     # warm compile
         ex.reset(key)
-        ems, wall = _timed_run(ex, chunks)
-        st = _staleness(ems, closed, span)
-        cadence_staleness.append(float(np.mean(st)))
-        rows.append(emit(
-            f"fig_emission.cadence.emit{every}",
-            wall / num_chunks * 1e6,
-            f"staleness_mean={np.mean(st):.3f};"
-            f"staleness_max={np.max(st):.3f};emissions={len(ems)};"
-            f"hw={_half_width(ems):.4f}"))
+        log, wall = _timed_run(ex, chunks)
+        stale, row = _row(f"fig_emission.cadence.emit{every}", log, wall,
+                          num_chunks, closed)
+        cadence_staleness.append(stale)
+        rows.append(row)
 
     # Watermark-driven emission.  Pipelined is the headline (a close
     # fires at the very arrival that sealed it); batched shows the
@@ -141,17 +143,13 @@ def run(quick: bool | None = None) -> list:
                   _registry(), key)
         # Warm past the FIRST interval close so the per-interval emit
         # step compiles outside the timed region too.
-        _timed_run(ex, chunks[:2 * chunks_per_interval])
+        ex.run(chunks[:2 * chunks_per_interval])
         ex.reset(key)
-        ems, wall = _timed_run(ex, chunks)
-        st = _staleness(ems, closed, span)
-        wm_staleness[ex.mode] = float(np.mean(st))
-        rows.append(emit(
-            f"fig_emission.watermark.{ex.mode}",
-            wall / num_chunks * 1e6,
-            f"staleness_mean={np.mean(st):.3f};"
-            f"staleness_max={np.max(st):.3f};emissions={len(ems)};"
-            f"hw={_half_width(ems):.4f}"))
+        log, wall = _timed_run(ex, chunks)
+        stale, row = _row(f"fig_emission.watermark.{ex.mode}", log, wall,
+                          num_chunks, closed)
+        wm_staleness[ex.mode] = stale
+        rows.append(row)
 
     # The figure's claim, asserted so the smoke lane catches regressions:
     # event-time emission is strictly fresher than every cadence variant.

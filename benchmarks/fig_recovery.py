@@ -5,18 +5,29 @@ The fault-tolerance trade-off the README documents, measured: frequent
 checkpoints cost steady-state throughput (each snapshot is one
 device→host transfer of the full runtime state plus ``npz``
 serialization) but bound the replay work after a crash to
-``every_chunks`` chunks.  Rows:
+``every_chunks`` chunks.
+
+Every run carries a ``repro.obs`` event log, and the checkpoint-cost
+numbers (payload bytes, snapshot count, serialize time, cadence drift)
+plus the recovery restore time are reduced from its
+``checkpoint_save`` / ``checkpoint_restore`` events by
+``repro.obs.export.checkpoint_stats`` — the same reducer the
+``summarize`` CLI runs, so this figure and the operator report cannot
+drift apart.
+
+Rows:
 
 * ``fig_rec.ckpt.<mode>.none`` / ``.every<N>`` — per-chunk cost of a
   full run with no / cadence-``N`` checkpointing; derived
   ``items_per_sec``, ``ckpt_kib`` (serialized payload size),
-  ``snaps`` (checkpoints taken) and ``overhead_pct`` vs the
-  checkpoint-free baseline.
+  ``snaps`` (checkpoints taken), ``ser_ms`` (mean serialize time) and
+  ``overhead_pct`` vs the checkpoint-free baseline.
 * ``fig_rec.recover.suffix<L>`` — wall time of a full recovery
   (deserialize + restore into a warm executor + replay L chunks +
-  drain); derived ``restore_ms`` (deserialize+restore only) and
-  ``chunks`` replayed.  Recovery scales with the suffix, not the
-  stream: the cadence knob directly buys recovery latency.
+  drain); derived ``restore_ms`` (deserialize+restore only, from the
+  ``checkpoint_restore`` event) and ``chunks`` replayed.  Recovery
+  scales with the suffix, not the stream: the cadence knob directly
+  buys recovery latency.
 """
 from __future__ import annotations
 
@@ -26,9 +37,10 @@ import jax
 
 from benchmarks import common
 from benchmarks.common import emit
+from repro.obs import EventLog, Telemetry
+from repro.obs import export as obx
 from repro.runtime import (BatchedExecutor, Checkpointer,
                            PipelinedExecutor, QueryRegistry, RuntimeConfig)
-from repro.runtime import checkpoint as ckp
 from repro.stream import GaussianSource, ReplayableStream, StreamAggregator
 
 
@@ -40,12 +52,15 @@ def _registry():
 
 
 def _timed_run(ex, stream, num_chunks, key):
+    """Reset, attach a fresh event log, run the stream timed."""
     ex.reset(key)
+    log = EventLog()
+    ex.attach_telemetry(Telemetry(log))
     t0 = time.perf_counter()
     for c in stream.range(0, num_chunks):
         ex.push(c)
     ex.finalize()
-    return time.perf_counter() - t0
+    return log, time.perf_counter() - t0
 
 
 def run(quick: bool | None = None) -> list:
@@ -73,23 +88,25 @@ def run(quick: bool | None = None) -> list:
     for make in (PipelinedExecutor, BatchedExecutor):
         ex = make(cfg, reg, key)
         ex.run(stream.prefix(cfg.batch_chunks))      # warm compile
-        base = _timed_run(ex, stream, num_chunks, key)
+        _, base = _timed_run(ex, stream, num_chunks, key)
         rows.append(emit(
             f"fig_rec.ckpt.{ex.mode}.none",
             base / num_chunks * 1e6,
             f"items_per_sec={total_items / base:.0f}"))
         for every in cadences:
-            ck = Checkpointer(every_chunks=every, keep=None)
-            ex.checkpointer = ck
-            wall = _timed_run(ex, stream, num_chunks, key)
+            ex.checkpointer = Checkpointer(every_chunks=every, keep=None)
+            log, wall = _timed_run(ex, stream, num_chunks, key)
             ex.checkpointer = None
             overhead = (wall - base) / base * 100.0
+            st = obx.checkpoint_stats(log.events)
             rows.append(emit(
                 f"fig_rec.ckpt.{ex.mode}.every{every}",
                 wall / num_chunks * 1e6,
                 f"items_per_sec={total_items / wall:.0f};"
-                f"ckpt_kib={len(ck.latest) / 1024:.1f};"
-                f"snaps={len(ck.saved)};"
+                f"ckpt_kib={st['bytes_last'] / 1024:.1f};"
+                f"snaps={st['saves']};"
+                f"ser_ms={st['serialize_s_mean'] * 1e3:.2f};"
+                f"drift={st['drift_chunks_max']};"
                 f"overhead_pct={overhead:.1f}"))
 
     # --- Recovery latency vs suffix length (pipelined). ---------------
@@ -109,14 +126,15 @@ def run(quick: bool | None = None) -> list:
                        num_chunks // 2, num_chunks})
     for suffix in suffixes:
         payload = payloads[num_chunks - suffix]
+        log = EventLog()
+        recovery.attach_telemetry(Telemetry(log))
         t0 = time.perf_counter()
-        ckpt = ckp.from_bytes(payload, recovery.state)
-        recovery.restore(ckpt)
-        restore_s = time.perf_counter() - t0
-        for c in stream.range(ckpt.stream_offset, num_chunks):
+        offset = recovery.restore(payload).stream_offset
+        for c in stream.range(offset, num_chunks):
             recovery.push(c)
         recovery.finalize()
         wall = time.perf_counter() - t0
+        restore_s = obx.checkpoint_stats(log.events)["restore_s_last"]
         rows.append(emit(
             f"fig_rec.recover.suffix{suffix}",
             wall * 1e6,

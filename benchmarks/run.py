@@ -25,12 +25,12 @@ def main(argv=None) -> None:
         # benchmarks.common (module-level sizes read the flag once).
         os.environ["BENCH_SMOKE"] = "1"
 
-    from benchmarks import (bench_ingest, bench_kernels, bench_train,
-                            fig5_microbench, fig6_rates_windows,
-                            fig7_scale_skew, fig8_means_over_time,
-                            fig9_network_traffic, fig10_taxi,
-                            fig_emission, fig_quantiles, fig_recovery,
-                            fig_runtime_modes)
+    from benchmarks import (bench_ingest, bench_kernels, bench_obs,
+                            bench_train, fig5_microbench,
+                            fig6_rates_windows, fig7_scale_skew,
+                            fig8_means_over_time, fig9_network_traffic,
+                            fig10_taxi, fig_emission, fig_quantiles,
+                            fig_recovery, fig_runtime_modes)
     modules = [
         ("fig5(a-c) microbenchmarks", fig5_microbench),
         ("fig6 arrival rates + windows", fig6_rates_windows),
@@ -43,6 +43,7 @@ def main(argv=None) -> None:
         ("recovery: checkpoint overhead + replay latency", fig_recovery),
         ("emission: staleness, cadence vs watermark", fig_emission),
         ("ingest hot path: fused vs masked-vmap", bench_ingest),
+        ("observability: telemetry overhead", bench_obs),
         ("kernel bench", bench_kernels),
         ("training-plane bench", bench_train),
     ]

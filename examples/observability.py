@@ -1,0 +1,91 @@
+"""Observability tour: device counters, event log, live report.
+
+One watermark-driven run with the full ``repro.obs`` stack attached:
+
+* a :class:`MeteredStream` counts the OFFERED load host-side;
+* the runtime's device counters (a pytree leaf folded inside the jitted
+  ingest — the hot loop is unchanged) account for every item's fate:
+  accepted / late / dropped / replaced, per stratum;
+* a :class:`Telemetry` + :class:`EventLog` pair records emissions with
+  CI half-widths, watermark closes, controller adaptations and
+  checkpoint costs to append-only JSONL;
+* the same log then renders three ways: the conservation ledger
+  (offered == ingested == accepted + dropped), a Prometheus ``/metrics``
+  scrape, and the ``python -m repro.obs.summarize`` run report.
+
+Run:  PYTHONPATH=src python examples/observability.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.obs import EventLog, Telemetry
+from repro.obs import export as obx
+from repro.obs import metrics as obm
+from repro.obs import summarize
+from repro.runtime import (Checkpointer, PipelinedExecutor, QueryRegistry,
+                           RuntimeConfig)
+from repro.stream import (GaussianSource, MeteredStream, ReplayableStream,
+                          StreamAggregator)
+
+
+def main():
+    stream = ReplayableStream(StreamAggregator(GaussianSource(), seed=11),
+                              chunk_size=1024, rate=4096.0, disorder=0.3,
+                              disorder_seed=4)
+    registry = (QueryRegistry()
+                .register("avg", "mean")
+                .register("total", "sum"))
+    cfg = RuntimeConfig(num_strata=3, capacity=256, num_intervals=4,
+                        interval_span=1.0, allowed_lateness=0.25,
+                        emission="watermark")
+
+    log_path = os.path.join(tempfile.mkdtemp(prefix="obs_demo_"),
+                            "events.jsonl")
+    with EventLog(log_path) as log:
+        ex = PipelinedExecutor(cfg, registry, jax.random.PRNGKey(0),
+                               checkpointer=Checkpointer(every_chunks=8),
+                               telemetry=Telemetry(log))
+        metered = MeteredStream(stream.prefix(32))
+        ex.run(metered)
+
+        # --- the conservation ledger: offered vs accounted ------------
+        c = obm.counters(ex.state.metrics)
+        print("=== item accounting (device counters vs metered source) ===")
+        print(f"offered   : {metered.items} items in {metered.chunks} "
+              f"chunks over {metered.event_span:.2f}s of event time")
+        print(f"ingested  : {int(np.sum(c['ingested']))} "
+              f"(per stratum {np.asarray(c['ingested']).tolist()})")
+        print(f"accepted  : {int(np.sum(c['accepted']))}   "
+              f"late: {int(np.sum(c['late']))}   "
+              f"dropped: {int(np.sum(c['dropped']))}   "
+              f"replaced: {int(np.sum(c['replaced']))}")
+        print(f"occupancy : {np.asarray(c['occupancy']).tolist()} "
+              f"resident samples per stratum")
+        assert metered.items == int(np.sum(c["ingested"]))
+        assert int(np.sum(c["ingested"])) == (int(np.sum(c["accepted"]))
+                                              + int(np.sum(c["dropped"])))
+        print("conservation holds: offered == ingested == "
+              "accepted + dropped\n")
+
+        # --- a Prometheus scrape (what /metrics would serve) ----------
+        print("=== /metrics (first lines) ===")
+        print("\n".join(obx.prometheus_text(ex).splitlines()[:12]), "\n...")
+
+        # hot-loop guarantee, stated with receipts
+        print(f"\nhot loop with telemetry attached: trace_count="
+              f"{ex.trace_count} (sentinels: "
+              + ", ".join(f"{s.name}={s.traces}"
+                          for s in ex._sentinels.values()) + ")\n")
+
+    # --- the run report, from the JSONL file ALONE --------------------
+    print(f"=== python -m repro.obs.summarize {log_path} ===")
+    summarize.main([log_path])
+
+
+if __name__ == "__main__":
+    main()

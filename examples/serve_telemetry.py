@@ -44,6 +44,8 @@ def main():
               + " ".join(f"t{t}={float(per.value[t]):.1f}ms"
                          for t in range(4)))
     print("generated shape:", out.shape)
+    print("\n--- /metrics (Prometheus text exposition) ---")
+    print(server.metrics_text(), end="")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,74 @@
+"""Retrace sentinel: the hot-loop trace-count guard as a reusable object.
+
+The pipelined hot loop's whole performance story is that ``push`` stays
+dispatch-only — a silent retrace (a shape change, a weak-typed scalar, a
+donation mismatch) turns every chunk into trace+compile and the latency
+SLO quietly dies.  PR 2/5 asserted ``trace_count == 1`` ad hoc in tests;
+this module packages the guard so executors carry it in production and
+CI runs it in strict mode (``REPRO_OBS_STRICT=1``) over the whole
+runtime suite.
+
+Each compiled step owns one :class:`RetraceSentinel` with a trace
+*budget* (``allowed``): the expected compilations are declared up front
+(1 for the pipelined step; the batched window step calls ``allow(1)``
+per new micro-batch size before compiling it).  A trace beyond the
+budget is a violation: recorded (and reported through the attached
+telemetry hook) by default, raised as :class:`RetraceError` in strict
+mode.  The sentinel's bump happens at TRACE time — inside ``jit`` when
+XLA actually retraces — so a warm cache hit costs one integer compare.
+"""
+from __future__ import annotations
+
+import os
+import warnings
+from typing import Callable, Optional
+
+
+def strict_from_env() -> bool:
+    """CI switch: ``REPRO_OBS_STRICT=1`` makes every sentinel raise."""
+    return os.environ.get("REPRO_OBS_STRICT", "") not in ("", "0")
+
+
+class RetraceError(RuntimeError):
+    """A compiled step retraced beyond its declared budget."""
+
+
+class RetraceSentinel:
+    """Trace-budget guard for one compiled step."""
+
+    def __init__(self, name: str, allowed: int = 1,
+                 strict: Optional[bool] = None,
+                 on_violation: Optional[Callable[[str, int, int], None]]
+                 = None):
+        self.name = name
+        self.allowed = allowed
+        self.strict = strict_from_env() if strict is None else strict
+        self.on_violation = on_violation
+        self.traces = 0
+        self.violations = 0
+
+    def allow(self, n: int = 1) -> None:
+        """Raise the budget — call BEFORE an expected (re)compile, e.g.
+        a new micro-batch scan shape."""
+        self.allowed += n
+
+    def trace(self) -> None:
+        """Record one trace (call from inside the traced function — it
+        runs exactly when jit actually retraces)."""
+        self.traces += 1
+        if self.traces <= self.allowed:
+            return
+        self.violations += 1
+        msg = (f"compiled step {self.name!r} retraced after warmup: "
+               f"{self.traces} traces > budget {self.allowed} — the "
+               "hot loop is paying trace+compile per call (shape/dtype "
+               "drift or a donation mismatch)")
+        if self.on_violation is not None:
+            self.on_violation(self.name, self.traces, self.allowed)
+        if self.strict:
+            raise RetraceError(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+    def __repr__(self) -> str:
+        return (f"RetraceSentinel({self.name!r}, traces={self.traces}, "
+                f"allowed={self.allowed}, violations={self.violations})")

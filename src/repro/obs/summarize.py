@@ -1,0 +1,132 @@
+"""``python -m repro.obs.summarize`` — render an event log as a report.
+
+Reads one JSONL event log (``obs/events.py`` schema) and prints the
+run's observability story: event census, accuracy (per-query realized
+CI half-widths), timeliness (staleness per closed interval, emission
+latency percentiles) and fault-tolerance cost (checkpoint bytes/time/
+cadence drift, recovery latency).  All numbers come from
+``obs/export.py`` reducers — the same functions the benchmark figures
+use, so this report and the figures cannot disagree.
+
+``--smoke`` runs a tiny self-contained pipelined stream first, writes
+its event log to a temp file, then summarizes it — the CI liveness
+check for the whole telemetry path.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import sys
+
+import numpy as np
+
+from repro.obs import export as obx
+from repro.obs.events import read_events
+
+
+def _fmt_pct(xs) -> str:
+    if not xs:
+        return "n/a"
+    a = np.asarray(xs, np.float64)
+    return (f"p50={np.percentile(a, 50):.4g} "
+            f"p95={np.percentile(a, 95):.4g} "
+            f"max={a.max():.4g} (n={len(a)})")
+
+
+def render(events, span=None) -> str:
+    """The report body (a plain-text table) for a parsed event list."""
+    lines = []
+    census = collections.Counter(ev["type"] for ev in events)
+    meta = obx.run_meta(events)
+    lines.append("== run ==")
+    if meta is not None:
+        lines.append(
+            f"mode={meta['mode']} emission={meta['emission']} "
+            f"strata={meta['num_strata']} intervals={meta['num_intervals']}"
+            f"×{meta['interval_span']} lateness={meta['allowed_lateness']} "
+            f"shards={meta['num_shards']}")
+        if span is None:
+            span = meta["interval_span"]
+    lines.append("events: " + ", ".join(
+        f"{t}={n}" for t, n in sorted(census.items())))
+
+    ems = [ev for ev in events if ev["type"] == "emission"]
+    if ems:
+        lines.append("== timeliness ==")
+        closed = obx.closed_intervals(events, span)
+        st = obx.staleness_series(events, span)
+        lines.append(f"closed intervals: {len(closed)}")
+        if st:
+            lines.append(f"staleness (event-time units): mean="
+                         f"{np.mean(st):.4g} " + _fmt_pct(st))
+        lines.append("emission latency (s): "
+                     + _fmt_pct(obx.latency_series(events)))
+        lines.append("== accuracy ==")
+        for q in sorted(ems[0]["results"]):
+            hw = obx.half_width_series(events, q)
+            lines.append(f"{q}: hw95 mean={np.mean(hw):.4g} "
+                         + _fmt_pct(hw))
+
+    cs = obx.checkpoint_stats(events)
+    if cs["saves"] or cs["restores"]:
+        lines.append("== fault tolerance ==")
+        lines.append(
+            f"saves={cs['saves']} bytes_total={cs['bytes_total']} "
+            f"serialize_s_mean={cs['serialize_s_mean']:.4g} "
+            f"drift_chunks_max={cs['drift_chunks_max']}")
+        if cs["restores"]:
+            lines.append(f"restores={cs['restores']} "
+                         f"restore_s_last={cs['restore_s_last']:.4g}")
+    return "\n".join(lines)
+
+
+def _smoke_log(path: str) -> None:
+    """Generate a small end-to-end event log (the CI liveness run)."""
+    import jax
+    from repro.obs import EventLog, Telemetry
+    from repro.runtime import (Checkpointer, PipelinedExecutor,
+                               QueryRegistry, RuntimeConfig)
+    from repro.stream import (GaussianSource, ReplayableStream,
+                              StreamAggregator)
+    reg = (QueryRegistry().register("avg", "mean")
+           .register("total", "sum"))
+    cfg = RuntimeConfig(num_strata=3, capacity=32, num_intervals=4,
+                        interval_span=1.0, allowed_lateness=0.25,
+                        emission="watermark")
+    stream = ReplayableStream(StreamAggregator(GaussianSource(), seed=7),
+                              chunk_size=128, rate=512.0)
+    with EventLog(path) as log:
+        ex = PipelinedExecutor(cfg, reg, jax.random.PRNGKey(0),
+                               checkpointer=Checkpointer(every_chunks=8),
+                               telemetry=Telemetry(log))
+        ex.run(stream.prefix(16))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.summarize", description=__doc__)
+    ap.add_argument("log", nargs="?", help="JSONL event log path")
+    ap.add_argument("--span", type=float, default=None,
+                    help="interval span override (cadence logs without "
+                         "a run_meta event)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="generate a tiny run's event log, then "
+                         "summarize it (CI liveness check)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        import tempfile
+        path = args.log or tempfile.mktemp(suffix=".jsonl")
+        _smoke_log(path)
+        events = read_events(path)
+        print(render(events, span=args.span))
+        assert any(e["type"] == "emission" for e in events), \
+            "smoke run produced no emission events"
+        return 0
+    if not args.log:
+        ap.error("event log path required (or --smoke)")
+    print(render(read_events(args.log), span=args.span))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,7 @@ The two executors mirror the paper's two stream-processing models
 (batched / Spark Streaming vs pipelined / Flink) over one shared jitted
 OASRS core; see ``repro.runtime.executor`` for the architecture notes.
 """
+from repro.obs import EventLog, Telemetry
 from repro.runtime import (checkpoint, controller, executor, records,
                            registry, watermark)
 from repro.runtime.checkpoint import Checkpointer, RuntimeCheckpoint
@@ -16,7 +17,7 @@ from repro.runtime.records import (TimestampedChunk, perturb_event_times,
                                    silence_key, stamp, stamp_sharded,
                                    timestamped_stream)
 from repro.runtime.registry import (EmissionContext, QueryRegistry,
-                                    StandingQuery)
+                                    StandingQuery, result_summary)
 
 __all__ = [
     "checkpoint", "controller", "executor", "records", "registry",
@@ -25,5 +26,6 @@ __all__ = [
     "PipelinedExecutor", "RuntimeConfig", "RuntimeState", "init_state",
     "TimestampedChunk", "perturb_event_times", "silence_key", "stamp",
     "stamp_sharded", "timestamped_stream", "EmissionContext",
-    "QueryRegistry", "StandingQuery",
+    "QueryRegistry", "StandingQuery", "result_summary",
+    "EventLog", "Telemetry",
 ]

@@ -47,10 +47,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obm
 from repro.runtime import controller as ctl
 from repro.runtime import watermark as wmk
 
-FORMAT = 2
+# Format 3: RuntimeState grew the device telemetry counters
+# (``obs.metrics.MetricsState``) as an appended leaf — the payload's
+# leaf set changed, so format-2 payloads are refused by version rather
+# than failing leaf-path validation with a confusing mismatch.
+FORMAT = 3
 _HEADER = "__header__"
 
 
@@ -341,6 +346,7 @@ def manifest(ckpt: RuntimeCheckpoint) -> dict:
     return {
         "watermark": wmk.export(st.wm),
         "controller": ctl.export(st.ctrl),
+        "metrics": obm.export(st.metrics),
         "open_interval": np.asarray(st.open_interval).tolist(),
         "slot_interval": np.asarray(st.slot_interval).tolist(),
         "emitted_through": ckpt.emitted_through,
@@ -421,6 +427,7 @@ class Checkpointer:
         offset = incorporated_offset(ex)
         if self.saved and self.saved[-1][0] == offset:
             return False
+        prev_offset = self.saved[-1][0] if self.saved else 0
         t0 = time.perf_counter()
         payload = to_bytes(capture(ex))
         self.saved.append((offset, payload))
@@ -429,5 +436,14 @@ class Checkpointer:
         if self.directory is not None:
             with open(f"{self.directory}/ckpt_{offset:08d}.npz", "wb") as f:
                 f.write(payload)
-        self.overhead_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.overhead_s += dt
+        telemetry = getattr(ex, "telemetry", None)
+        if telemetry is not None:
+            # Cadence drift: chunks actually covered since the previous
+            # save, relative to the configured cadence. Nonzero under
+            # batched mode (snapshots snap to flush boundaries) — the
+            # recovery-latency budget an operator actually has.
+            drift = (offset - prev_offset) - self.every_chunks
+            telemetry.on_checkpoint_save(offset, len(payload), dt, drift)
         return True

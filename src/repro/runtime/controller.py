@@ -85,6 +85,19 @@ def export(ctrl: ControllerState) -> dict:
     }
 
 
+def telemetry(ctrl: ControllerState) -> dict:
+    """Observable controller signals for one ``controller`` event:
+    global capacity (shard caps summed — the Σ the paper's N_i means),
+    the worst shard's pressure and latency EMA.  Blocks on the state;
+    emitted only at emission boundaries (already synchronized)."""
+    cap = np.asarray(ctrl.capacity)
+    if cap.ndim == 2:
+        cap = cap.sum(axis=0)
+    return {"capacity": cap.tolist(),
+            "pressure": float(np.max(np.asarray(ctrl.pressure))),
+            "latency_ema": float(np.max(np.asarray(ctrl.latency_ema)))}
+
+
 def from_export(d: dict) -> ControllerState:
     """Rebuild a :class:`ControllerState` from :func:`export` output."""
     return ControllerState(

@@ -44,6 +44,8 @@ from repro.core import error as err
 from repro.core import oasrs
 from repro.core import quantile as qt
 from repro.core import window as win
+from repro.obs import metrics as obm
+from repro.obs.sentinel import RetraceSentinel
 from repro.runtime import checkpoint as ckp
 from repro.runtime import controller as ctl
 from repro.runtime import watermark as wmk
@@ -90,6 +92,13 @@ class RuntimeState:
     open_interval: jax.Array      # () i32 — newest interval seen
     wm: wmk.WatermarkState
     ctrl: ctl.ControllerState
+    # Device telemetry counters (appended LAST so the pre-existing leaf
+    # order is untouched). Unconditionally part of the ingest — NOT
+    # gated on whether a Telemetry is attached — so the hot-loop jaxpr
+    # is identical with observability on or off, and the counters ride
+    # the same donation/checkpoint/restore path as the reservoirs
+    # (bitwise exactly-once, like everything else in this pytree).
+    metrics: obm.MetricsState
 
 
 @dataclasses.dataclass
@@ -139,6 +148,7 @@ def init_state(cfg: RuntimeConfig, key: jax.Array) -> RuntimeState:
             open_interval=jnp.zeros((), jnp.int32),
             wm=wmk.init(),
             ctrl=ctl.init(cap),
+            metrics=obm.init(cfg.num_strata),
         )
 
     if cfg.num_shards == 1:
@@ -180,16 +190,25 @@ def _route_and_reset(cfg: RuntimeConfig, state: RuntimeState,
     return r, iv, desired
 
 
-def _finish_ingest(cfg: RuntimeConfig, state: RuntimeState, r, iv,
-                   desired) -> RuntimeState:
+def _finish_ingest(cfg: RuntimeConfig, state: RuntimeState, chunk, r, iv,
+                   desired, counts_before) -> RuntimeState:
     k = cfg.num_intervals
     window = win.WindowState(
         intervals=iv,
         cursor=jnp.mod(r.open_interval + 1, k),
         filled=jnp.minimum(r.open_interval + 1, k))
+    # Device telemetry fold — a few bincounts over arrays the routing
+    # already produced, inlined into this same jitted step (zero extra
+    # dispatches). ``counts_before`` is the post-reset/pre-fold [K, S]
+    # cell counts; against the post-fold counts they yield per-stratum
+    # replacement-phase arrivals and the occupancy gauge exactly.
+    metrics = obm.ingest_update(
+        state.metrics, cfg.num_strata, chunk.stratum_ids, chunk.mask,
+        r.accept, r.target_interval, state.open_interval,
+        counts_before, iv.counts, iv.capacity)
     return RuntimeState(window=window, slot_interval=desired,
                         open_interval=r.open_interval, wm=r.wm,
-                        ctrl=state.ctrl)
+                        ctrl=state.ctrl, metrics=metrics)
 
 
 def _ingest_chunk(cfg: RuntimeConfig, state: RuntimeState,
@@ -214,6 +233,7 @@ def _ingest_chunk(cfg: RuntimeConfig, state: RuntimeState,
                          "expected 'fused' or 'masked'")
     k, s_cnt = cfg.num_intervals, cfg.num_strata
     r, iv, desired = _route_and_reset(cfg, state, chunk)
+    counts_before = iv.counts
 
     # Route each accepted item ONCE: slot j = interval mod K owns it, and
     # it survives only if that slot currently holds its interval (an item
@@ -239,7 +259,7 @@ def _ingest_chunk(cfg: RuntimeConfig, state: RuntimeState,
                             flat.values, iv.values),
         counts=flat.counts.reshape(k, s_cnt),
         key=iv.key.at[0].set(flat.key))
-    return _finish_ingest(cfg, state, r, iv, desired)
+    return _finish_ingest(cfg, state, chunk, r, iv, desired, counts_before)
 
 
 def _ingest_chunk_masked(cfg: RuntimeConfig, state: RuntimeState,
@@ -256,6 +276,7 @@ def _ingest_chunk_masked(cfg: RuntimeConfig, state: RuntimeState,
     k = cfg.num_intervals
     m = chunk.stratum_ids.shape[0]
     r, iv, desired = _route_and_reset(cfg, state, chunk)
+    counts_before = iv.counts
 
     slot_masks = r.accept[None, :] & (
         r.target_interval[None, :] == desired[:, None])          # [K, M]
@@ -267,7 +288,7 @@ def _ingest_chunk_masked(cfg: RuntimeConfig, state: RuntimeState,
             st, chunk.stratum_ids, chunk.values, mk, u_accept, u_slot),
         in_axes=(0, 0))(iv, slot_masks)
     iv = dataclasses.replace(folded, key=iv.key.at[0].set(key))
-    return _finish_ingest(cfg, state, r, iv, desired)
+    return _finish_ingest(cfg, state, chunk, r, iv, desired, counts_before)
 
 
 def _merged_view(cfg: RuntimeConfig, state: RuntimeState):
@@ -434,7 +455,8 @@ class _ExecutorBase:
 
     def __init__(self, cfg: RuntimeConfig, registry: QueryRegistry,
                  key: jax.Array,
-                 checkpointer: Optional[ckp.Checkpointer] = None):
+                 checkpointer: Optional[ckp.Checkpointer] = None,
+                 telemetry: Optional[obm.Telemetry] = None):
         if len(registry) == 0:
             raise ValueError("register at least one standing query")
         if cfg.emission not in ("cadence", "watermark"):
@@ -475,6 +497,18 @@ class _ExecutorBase:
         registry.freeze()     # traced steps close over the query list
         self.state = init_state(cfg, key)
         self.checkpointer = checkpointer
+        # Host-side observability. The device counters in state.metrics
+        # are unconditional; the Telemetry (event log + host mirrors) is
+        # the only on/off switch, and every hook it owns fires at a
+        # boundary that already synchronized — attaching one changes
+        # neither the hot-loop jaxpr nor its trace count (tested).
+        self.telemetry: Optional[obm.Telemetry] = None
+        # One retrace sentinel per compiled step: the expected traces
+        # are declared as budgets (the batched window step raises its
+        # budget per new micro-batch shape); anything beyond is the
+        # hot loop silently paying trace+compile per call — logged, or
+        # raised under REPRO_OBS_STRICT=1 / Telemetry(strict_retrace=).
+        self._sentinels: Dict[str, RetraceSentinel] = {}
         self.emissions: List[Emission] = []
         self.chunks_pushed = 0        # stream offset: chunks accepted so far
         self._emission_cursor = 0     # monotonic Emission.index (survives
@@ -493,10 +527,11 @@ class _ExecutorBase:
         self._host_frontier = np.full((cfg.num_shards,), wmk.NEG_TIME,
                                       np.float32)
         self._emitted_through = -1    # newest interval already emitted
-        self.emit_trace_count = 0
         if cfg.emission == "watermark":
+            emit_sentinel = self._sentinel("emit_interval", allowed=1)
+
             def emit_iv(state, interval, base_key, latency_s):
-                self.emit_trace_count += 1     # TRACE time only
+                emit_sentinel.trace()          # TRACE time only
                 results, istats = _evaluate_interval(
                     cfg, registry, state, interval, base_key)
                 # Per-window pressure: the realized widths fed back are
@@ -508,8 +543,48 @@ class _ExecutorBase:
                 return state, results
 
             self._emit_interval_fn = jax.jit(emit_iv, donate_argnums=0)
-        self._query_fn = jax.jit(
-            lambda st: _evaluate(cfg, registry, st)[0])
+        query_sentinel = self._sentinel("query", allowed=1)
+
+        def query_fn(st):
+            query_sentinel.trace()
+            return _evaluate(cfg, registry, st)[0]
+
+        self._query_fn = jax.jit(query_fn)
+        if telemetry is not None:
+            self.attach_telemetry(telemetry)
+
+    def _sentinel(self, name: str, allowed: int) -> RetraceSentinel:
+        s = RetraceSentinel(f"{self.mode}.{name}", allowed=allowed,
+                            on_violation=self._on_retrace)
+        # Subclasses create sentinels AFTER super().__init__ has already
+        # attached telemetry — honor its strictness override here too.
+        if (self.telemetry is not None
+                and self.telemetry.strict_retrace is not None):
+            s.strict = self.telemetry.strict_retrace
+        self._sentinels[name] = s
+        return s
+
+    def _on_retrace(self, name: str, traces: int, allowed: int) -> None:
+        if self.telemetry is not None:
+            self.telemetry.on_retrace(name, traces, allowed)
+
+    def attach_telemetry(self, telemetry: obm.Telemetry) -> None:
+        """Attach (or swap) the host-side telemetry hub; logs one
+        ``run_meta`` event describing this executor. Benchmarks attach
+        a FRESH Telemetry after ``reset()`` so the warm run's events
+        don't pollute the timed run's log."""
+        self.telemetry = telemetry
+        if telemetry.strict_retrace is not None:
+            for s in self._sentinels.values():
+                s.strict = telemetry.strict_retrace
+        telemetry.on_run_meta(self)
+
+    @property
+    def emit_trace_count(self) -> int:
+        """Traces of the per-interval-close emission step (watermark
+        mode) — 1 after warmup, forever."""
+        s = self._sentinels.get("emit_interval")
+        return 0 if s is None else s.traces
 
     def query(self) -> Dict[str, Result]:
         """Evaluate every standing query on the current state (ad hoc —
@@ -546,14 +621,20 @@ class _ExecutorBase:
         chunk boundaries, like an emission."""
         return ckp.capture(self)
 
-    def restore(self, ckpt) -> None:
+    def restore(self, ckpt):
         """Restore a checkpoint (a :class:`RuntimeCheckpoint` or its
         serialized bytes), KEEPING compiled steps warm. Replay the
         stream suffix from ``ckpt.stream_offset`` afterwards; the
-        continuation is bitwise-identical to an uninterrupted run."""
+        continuation is bitwise-identical to an uninterrupted run.
+        Returns the (deserialized) checkpoint."""
+        t0 = time.perf_counter()
         if isinstance(ckpt, (bytes, bytearray)):
             ckpt = ckp.from_bytes(bytes(ckpt), self.state)
         ckp.restore_into(self, ckpt)
+        if self.telemetry is not None:
+            self.telemetry.on_checkpoint_restore(
+                ckpt.stream_offset, time.perf_counter() - t0)
+        return ckpt
 
     def run(self, chunks: Iterable[TimestampedChunk]) -> List[Emission]:
         for c in chunks:
@@ -646,6 +727,10 @@ class _ExecutorBase:
         self.emissions.append(em)
         self._emission_cursor += 1
         self._items_since_emit = 0
+        if self.telemetry is not None:
+            # Emission IS the host-sync boundary — the results were just
+            # blocked on, so sampling/logging here adds no new sync.
+            self.telemetry.on_emission(self, em)
         return em
 
 
@@ -664,11 +749,16 @@ class BatchedExecutor(_ExecutorBase):
 
     def __init__(self, cfg: RuntimeConfig, registry: QueryRegistry,
                  key: jax.Array,
-                 checkpointer: Optional[ckp.Checkpointer] = None):
-        super().__init__(cfg, registry, key, checkpointer)
+                 checkpointer: Optional[ckp.Checkpointer] = None,
+                 telemetry: Optional[obm.Telemetry] = None):
+        super().__init__(cfg, registry, key, checkpointer, telemetry)
         self.batch_chunks = cfg.batch_chunks
         self._pending: List[TimestampedChunk] = []
         self._step_cache: dict = {}
+        # Budget starts at 0: each NEW micro-batch shape declares its
+        # compile via allow(1) in _window_step, so a RE-trace of an
+        # already-seen shape is a violation.
+        self._step_sentinel = self._sentinel("window_step", allowed=0)
 
     def reset(self, key: jax.Array) -> None:
         super().reset(key)
@@ -691,6 +781,8 @@ class BatchedExecutor(_ExecutorBase):
         """
         fn = self._step_cache.get(num_chunks)
         if fn is None:
+            self._step_sentinel.allow(1)      # declared compile: new shape
+            sentinel = self._step_sentinel
             cfg, registry = self.cfg, self.registry
             ingest = _ingest_chunk
             if cfg.num_shards > 1:
@@ -703,12 +795,14 @@ class BatchedExecutor(_ExecutorBase):
                 # emitted answers are a property of event time, not of
                 # where the driver drew its batch boundaries.
                 def step(state, stacked, latency_prev):
+                    sentinel.trace()
                     def body(st, ch):
                         return ingest(cfg, st, ch), None
                     state, _ = jax.lax.scan(body, state, stacked)
                     return state, None
             else:
                 def step(state, stacked, latency_prev):
+                    sentinel.trace()
                     def body(st, ch):
                         return ingest(cfg, st, ch), None
                     state, _ = jax.lax.scan(body, state, stacked)
@@ -756,6 +850,8 @@ class BatchedExecutor(_ExecutorBase):
                     self.batch_chunks,
                     float(jnp.max(self.state.ctrl.pressure)),
                     self.cfg.max_batch_chunks, closes_per_batch=closes)
+            if self.telemetry is not None:
+                self.telemetry.on_flush(self, self.batch_chunks)
             return
         jax.block_until_ready(results)    # the micro-batch barrier
         self._last_latency = time.perf_counter() - t0
@@ -765,6 +861,8 @@ class BatchedExecutor(_ExecutorBase):
                 self.batch_chunks,
                 float(jnp.max(self.state.ctrl.pressure)),
                 self.cfg.max_batch_chunks)
+        if self.telemetry is not None:
+            self.telemetry.on_flush(self, self.batch_chunks)
 
     def finalize(self) -> List[Emission]:
         self._flush()
@@ -787,15 +885,16 @@ class PipelinedExecutor(_ExecutorBase):
 
     def __init__(self, cfg: RuntimeConfig, registry: QueryRegistry,
                  key: jax.Array,
-                 checkpointer: Optional[ckp.Checkpointer] = None):
-        super().__init__(cfg, registry, key, checkpointer)
-        self.trace_count = 0
+                 checkpointer: Optional[ckp.Checkpointer] = None,
+                 telemetry: Optional[obm.Telemetry] = None):
+        super().__init__(cfg, registry, key, checkpointer, telemetry)
+        step_sentinel = self._sentinel("step", allowed=1)
         ingest = _ingest_chunk
         if cfg.num_shards > 1:
             ingest = jax.vmap(_ingest_chunk, in_axes=(None, 0, 0))
 
         def core(state, chunk):
-            self.trace_count += 1          # increments at TRACE time only
+            step_sentinel.trace()          # fires at TRACE time only
             return ingest(cfg, state, chunk)
 
         # donate_argnums=0: the ring buffer is updated in place every
@@ -805,7 +904,10 @@ class PipelinedExecutor(_ExecutorBase):
         # pushes, never holding the donated device buffer.
         self._step = jax.jit(core, donate_argnums=0)
 
+        emit_sentinel = self._sentinel("emit", allowed=1)
+
         def emit(state, latency_s):
+            emit_sentinel.trace()
             results, stats = _evaluate(cfg, registry, state)
             state = _apply_controller(cfg, state, results, stats,
                                       latency_s)
@@ -814,6 +916,12 @@ class PipelinedExecutor(_ExecutorBase):
         self._emit = jax.jit(emit, donate_argnums=0)
         self._chunks_since_emit = 0
         self._emit_t0 = time.perf_counter()
+
+    @property
+    def trace_count(self) -> int:
+        """Traces of the per-chunk hot-loop step — 1 after warmup,
+        forever (the sync-free contract; guarded by the sentinel)."""
+        return self._sentinels["step"].traces
 
     def reset(self, key: jax.Array) -> None:
         super().reset(key)

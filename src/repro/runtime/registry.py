@@ -25,6 +25,7 @@ from typing import Callable, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import error as err
 from repro.core import quantile as qt
@@ -133,6 +134,47 @@ class EmissionContext:
         w = self.num_shards
         full = jnp.broadcast_to(mask_ks[None], (w,) + mask_ks.shape)
         return full.reshape(-1)
+
+
+def _tolist(x):
+    a = np.asarray(x)
+    return a.item() if a.ndim == 0 else a.tolist()
+
+
+def _hw95(est) -> object:
+    """95% half-width in HOST numpy — the same ``z·sqrt(max(var, 0))``
+    as ``Estimate.error_bound(0.95)`` (asserted equal in the obs tests)
+    without its per-call jnp dispatches: the telemetry path runs once
+    per emission and must stay off the device queue."""
+    z = err.Z_FOR_CONFIDENCE[0.95]
+    var = np.asarray(est.variance, np.float32)
+    return _tolist(z * np.sqrt(np.maximum(var, 0.0)))
+
+
+def result_summary(results: Dict[str, Result]) -> dict:
+    """JSON-serializable view of one emission's answers — value + 95%
+    CI half-width per query (vector answers stay vectors).  This is what
+    ``obs/events.py`` emission events carry: the accuracy time series is
+    readable from the log without unpickling any runtime type.  Blocks
+    on the results; called where the emission already synchronized."""
+    out = {}
+    for name, r in results.items():
+        if isinstance(r, sk.HeavyHitters):
+            out[name] = {"kind": "heavy_hitters",
+                         "keys": _tolist(r.keys),
+                         "counts": _tolist(r.estimate.value),
+                         "hw95": _hw95(r.estimate)}
+        else:
+            out[name] = {"kind": "estimate",
+                         "value": _tolist(r.value),
+                         "hw95": _hw95(r)}
+    return out
+
+
+def describe(registry: "QueryRegistry") -> list:
+    """Static query-catalog description (the ``run_meta`` event)."""
+    return [{"name": q.name, "kind": q.kind, "window": q.window}
+            for q in registry.queries]
 
 
 class QueryRegistry:

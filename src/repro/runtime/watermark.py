@@ -65,6 +65,16 @@ def host_closed_through(frontier: np.ndarray, allowed_lateness: float,
     return int(np.floor(w / np.float32(span))) - 1
 
 
+def staleness(watermark: float, interval: int, span: float) -> float:
+    """Event-time staleness of ``interval``'s answer at an emission:
+    how far the watermark had moved past the interval's close
+    ``(interval+1)·span`` when the answer surfaced.  Float32 like every
+    other event-time comparison — ``obs`` telemetry, the benchmark
+    figures and ``repro.obs.summarize`` all share this one definition."""
+    close = np.float32((interval + 1) * span)
+    return float(np.float32(watermark) - close)
+
+
 def host_open_interval(frontier: np.ndarray, span: float) -> int:
     """Newest event interval seen, from the host frontier mirror (the
     max item time's interval — matches ``route_chunk``'s open, which

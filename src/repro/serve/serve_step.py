@@ -64,5 +64,17 @@ class Server:
     def telemetry_per_tenant(self) -> error.Estimate:
         return query.group_means(self.telemetry)
 
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the serving-plane telemetry —
+        windowed decode-latency estimates WITH their 95% half-widths
+        (per tenant, labelled by index).  Blocks on the estimates; a
+        scrape is a sync point, same contract as the runtime's
+        ``repro.obs.export.prometheus_text``."""
+        from repro.obs.export import estimates_prometheus_text
+        return estimates_prometheus_text({
+            "decode_latency_ms": self.telemetry_mean(),
+            "tenant_decode_latency_ms": self.telemetry_per_tenant(),
+        })
+
     def new_window(self):
         self.telemetry = oasrs.reset_window(self.telemetry)

@@ -1,13 +1,13 @@
 """Stream substrate: sources, aggregator (Kafka analog), replay, pipeline."""
 from repro.stream import aggregator, pipeline, replay, sources
 from repro.stream.aggregator import StreamAggregator
-from repro.stream.replay import ReplayableStream
+from repro.stream.replay import MeteredStream, ReplayableStream
 from repro.stream.sources import (GaussianSource, NetflowSource,
                                   PoissonSource, StreamChunk, TaxiSource,
                                   skewed)
 
 __all__ = [
     "aggregator", "pipeline", "replay", "sources", "StreamAggregator",
-    "ReplayableStream", "GaussianSource", "NetflowSource", "PoissonSource",
-    "StreamChunk", "TaxiSource", "skewed",
+    "MeteredStream", "ReplayableStream", "GaussianSource",
+    "NetflowSource", "PoissonSource", "StreamChunk", "TaxiSource", "skewed",
 ]

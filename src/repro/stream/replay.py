@@ -98,6 +98,48 @@ class ReplayableStream:
         return list(self.range(0, num_chunks))
 
 
+class MeteredStream:
+    """Iterator wrapper that meters a chunk stream host-side.
+
+    Counts chunks, masked items and the event-time span covered, reading
+    ONLY each chunk's own (already materialized) buffers — wrapping a
+    pipelined executor's input adds no sync on the in-flight step, the
+    same contract as the watermark frontier mirror.  Feeds the source
+    half of the observability story: offered load vs what the runtime's
+    device counters say it accepted.
+    """
+
+    def __init__(self, chunks):
+        self._chunks = chunks
+        self.chunks = 0
+        self.items = 0
+        self.min_time = float("inf")
+        self.max_time = float("-inf")
+
+    def __iter__(self):
+        import numpy as np
+        for c in self._chunks:
+            m = np.asarray(c.mask, bool)
+            t = np.asarray(c.times, np.float32)
+            self.chunks += 1
+            self.items += int(m.sum())
+            if m.any():
+                self.min_time = min(self.min_time, float(t[m].min()))
+                self.max_time = max(self.max_time, float(t[m].max()))
+            yield c
+
+    @property
+    def event_span(self) -> float:
+        """Event time covered by the metered traffic so far."""
+        if self.chunks == 0 or self.min_time > self.max_time:
+            return 0.0
+        return self.max_time - self.min_time
+
+    def summary(self) -> dict:
+        return {"chunks": self.chunks, "items": self.items,
+                "event_span": self.event_span}
+
+
 @dataclasses.dataclass
 class ReplayResult:
     items_per_sec: float

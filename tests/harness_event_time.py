@@ -115,6 +115,87 @@ def oracle_run(chunks, span, lateness, num_intervals,
                      interval_counts=counts, frontier=frontier)
 
 
+def metrics_oracle(chunks, span, lateness, num_intervals, num_strata,
+                   capacity) -> Dict[str, object]:
+    """Pure-numpy mirror of the runtime's device telemetry counters
+    (``repro.obs.metrics.MetricsState``), per-row sequential walk.
+
+    Maintains each shard row's interval ring — slot occupancy, reset-on-
+    recycle, per-(slot × stratum) arrival counts — because ``replaced``
+    and ``occupancy`` are defined against the cells: an arrival is a
+    replacement iff its cell already held ``capacity`` items, and the
+    gauge is ``min(count, capacity)`` summed over live slots.
+    ``capacity`` is the PER-SHARD per-stratum reservoir capacity (the
+    runtime splits the global capacity ceil-wise across shards); pass
+    the constant configured value — the oracle covers controller-less
+    configurations, where adopted capacity never moves.
+
+    Returns the same dict :func:`repro.obs.metrics.counters` produces
+    (shard rows summed), for bitwise comparison.
+    """
+    first = np.asarray(chunks[0].times, np.float32)
+    w = first.shape[0] if first.ndim == 2 else 1
+    k = num_intervals
+    frontier = np.full((w,), NEG, np.float32)
+    open_iv = np.zeros((w,), np.int64)
+    slots = np.arange(k, dtype=np.int64)
+    slot_interval = np.tile(-np.mod(-slots, k), (w, 1))   # init_state's ring
+    cell_counts = np.zeros((w, k, num_strata), np.int64)
+    per = {name: np.zeros((num_strata,), np.int64)
+           for name in ("ingested", "accepted", "late", "dropped",
+                        "replaced")}
+    occupancy = np.zeros((w, num_strata), np.int64)
+    n_chunks = n_items = 0
+
+    def binc(sel, sids):
+        return np.bincount(sids[sel], minlength=num_strata)
+
+    for c in chunks:
+        t = np.asarray(c.times, np.float32)
+        s = np.asarray(c.stratum_ids, np.int64)
+        m = np.asarray(c.mask, bool)
+        if t.ndim == 1:
+            t, s, m = (x[None, :] for x in (t, s, m))
+        for row in range(w):
+            wmark = frontier[row] - np.float32(lateness)   # pre-chunk
+            tgt = np.floor(t[row] / np.float32(span)).astype(np.int64)
+            masked_tgt = tgt[m[row]]
+            new_open = open_iv[row]
+            if masked_tgt.size:
+                new_open = max(new_open, int(masked_tgt.max()))
+            # Ring maintenance: recycled slots reset their cell counts.
+            desired = new_open - np.mod(new_open - slots, k)
+            reset = desired != slot_interval[row]
+            cell_counts[row][reset, :] = 0
+            slot_interval[row] = desired
+            oldest = new_open - k + 1
+            accept = m[row] & ~(t[row] < wmark) & ~(tgt < oldest)
+            per["ingested"] += binc(m[row], s[row])
+            per["accepted"] += binc(accept, s[row])
+            per["late"] += binc(accept & (tgt < open_iv[row]), s[row])
+            per["dropped"] += binc(m[row] & ~accept, s[row])
+            before = cell_counts[row].copy()
+            np.add.at(cell_counts[row],
+                      (np.mod(tgt[accept], k), s[row][accept]), 1)
+            fill0 = np.minimum(before, capacity)
+            fill1 = np.minimum(cell_counts[row], capacity)
+            per["replaced"] += ((cell_counts[row] - before)
+                               - (fill1 - fill0)).sum(axis=0)
+            occupancy[row] = fill1.sum(axis=0)
+            masked_t = t[row][m[row]]
+            if masked_t.size:
+                frontier[row] = np.float32(
+                    max(frontier[row], np.float32(masked_t.max())))
+            open_iv[row] = new_open
+            n_chunks += 1
+            n_items += int(m[row].sum())
+    out = {name: arr.astype(np.int64) for name, arr in per.items()}
+    out["occupancy"] = occupancy.sum(axis=0)
+    out["chunks"] = n_chunks
+    out["items"] = n_items
+    return out
+
+
 def session_mask_oracle(activity: np.ndarray, slot_interval: np.ndarray,
                         gap_intervals: int) -> np.ndarray:
     """Per-key current-session membership, walked the obvious way.

@@ -1,0 +1,399 @@
+"""Observability subsystem tests — the sync-free telemetry contract.
+
+The load-bearing claims, in order:
+
+1. Telemetry is FREE on the hot loop: a telemetry-attached pipelined run
+   keeps trace_count == 1 and its per-chunk jaxpr is IDENTICAL to a
+   telemetry-off run's (the device counters are unconditional state; the
+   on/off switch is host-only).
+2. The device counters are exactly-once truth: bitwise equal to a pure
+   numpy oracle across both executors, sharded and not, and across a
+   crash/restore/replay sweep; their per-stratum totals decompose the
+   watermark's scalar accounting.
+3. The event log is a faithful, validated series: JSONL round-trips
+   through the schema validator, checkpoint costs are logged, and
+   ``repro.obs.summarize`` reproduces the staleness numbers the
+   emission figure computes — from the log alone.
+4. The retrace sentinel catches hot-loop retraces (warns by default,
+   raises under strict mode) and batched micro-batch resizes stay
+   inside its declared budget.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from harness_event_time import metrics_oracle, random_stream
+from repro.core import distributed as dist
+from repro.obs import (EventLog, RetraceError, RetraceSentinel, Telemetry,
+                       metrics as obm, read_events, validate_event)
+from repro.obs import export as obx
+from repro.runtime import (BatchedExecutor, Checkpointer,
+                           PipelinedExecutor, QueryRegistry, RuntimeConfig)
+from repro.runtime.executor import _ingest_chunk
+from repro.stream import (GaussianSource, MeteredStream, ReplayableStream,
+                          StreamAggregator)
+
+S = 3
+
+
+def _registry():
+    return (QueryRegistry()
+            .register("avg", "mean")
+            .register("total", "sum"))
+
+
+def _cfg(**kw):
+    base = dict(num_strata=S, capacity=16, num_intervals=4,
+                interval_span=1.0, allowed_lateness=0.4, emit_every=3)
+    base.update(kw)
+    return RuntimeConfig(**base)
+
+
+def _stream(num_chunks=12, chunk_size=96, seed=5, rate=384.0):
+    src = ReplayableStream(StreamAggregator(GaussianSource(), seed=seed),
+                           chunk_size=chunk_size, rate=rate,
+                           disorder=0.3, disorder_seed=2)
+    return src, src.prefix(num_chunks)
+
+
+def _shard_cap(cap, shards):
+    if shards == 1:
+        return cap
+    return int(dist.split_capacity(
+        jnp.full((S,), cap, jnp.int32), shards)[0])
+
+
+# ---------------------------------------------------------------------------
+# 1. Telemetry costs the hot loop nothing.
+# ---------------------------------------------------------------------------
+
+def test_hot_loop_identical_with_telemetry_on(key):
+    """Trace-count 1 AND jaxpr-identical vs telemetry-off — attaching a
+    Telemetry changes nothing the compiler sees."""
+    cfg = _cfg(emit_every=10_000)     # no emissions: pure hot loop
+    _, chunks = _stream()
+    off = PipelinedExecutor(cfg, _registry(), key)
+    on = PipelinedExecutor(cfg, _registry(), key,
+                           telemetry=Telemetry(EventLog()))
+    for c in chunks:
+        off.push(c)
+        on.push(c)
+    assert off.trace_count == 1 and on.trace_count == 1
+    jaxpr_off = str(jax.make_jaxpr(
+        lambda st, ch: _ingest_chunk(cfg, st, ch))(off.state, chunks[0]))
+    jaxpr_on = str(jax.make_jaxpr(
+        lambda st, ch: _ingest_chunk(cfg, st, ch))(on.state, chunks[0]))
+    assert jaxpr_on == jaxpr_off
+    for prim in ("callback", "psum", "all_gather", "all_reduce",
+                 "infeed", "outfeed"):
+        assert prim not in jaxpr_on, f"{prim} in telemetry-on hot loop!"
+    # The device states themselves agree bitwise — same stream, same
+    # ingest, counters included.
+    for a, b in zip(jax.tree.leaves(jax.device_get(on.state)),
+                    jax.tree.leaves(jax.device_get(off.state))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# 2. Device counters: oracle-bitwise, crash-proof, watermark-consistent.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shards", [1, 2])
+@pytest.mark.parametrize("make", [PipelinedExecutor, BatchedExecutor])
+def test_device_counters_match_numpy_oracle(key, make, shards):
+    rng = np.random.default_rng(17)
+    for trial in range(3):
+        chunks = random_stream(rng, S)
+        if shards > 1:
+            chunks = [jax.tree.map(lambda x: jnp.stack([x, x]), c)
+                      for c in chunks]
+        cfg = _cfg(num_shards=shards)
+        oracle = metrics_oracle(chunks, cfg.interval_span,
+                                cfg.allowed_lateness, cfg.num_intervals,
+                                S, _shard_cap(cfg.capacity, shards))
+        ex = make(cfg, _registry(), jax.random.fold_in(key, trial))
+        ex.run(chunks)
+        got = obm.counters(ex.state.metrics)
+        for name, want in oracle.items():
+            assert np.array_equal(np.asarray(got[name]),
+                                  np.asarray(want)), \
+                f"{name}: {got[name]} != {want} (trial {trial})"
+
+
+@pytest.mark.parametrize("make", [PipelinedExecutor, BatchedExecutor])
+def test_counters_survive_crash_restore_bitwise(key, make):
+    """Crash/restore/replay sweep: after recovery from ANY snapshot
+    offset, the final counters equal the uninterrupted run's — the
+    telemetry is exactly-once alongside the reservoirs."""
+    src, chunks = _stream(num_chunks=10)
+    cfg = _cfg(batch_chunks=2)
+    straight = make(cfg, _registry(), key)
+    straight.run(chunks)
+    want = obm.counters(straight.state.metrics)
+
+    victim = make(cfg, _registry(), key)
+    ck = Checkpointer(every_chunks=2, keep=None)
+    victim.checkpointer = ck
+    victim.run(chunks)
+    for offset, payload in ck.saved:
+        recovery = make(cfg, _registry(), jax.random.PRNGKey(99))
+        recovery.restore(payload)
+        for c in src.range(offset, len(chunks)):
+            recovery.push(c)
+        recovery.finalize()
+        got = obm.counters(recovery.state.metrics)
+        for name, w in want.items():
+            assert np.array_equal(np.asarray(got[name]), np.asarray(w)), \
+                f"{name} diverged after restore from offset {offset}"
+
+
+def test_stratum_counters_decompose_watermark_totals(key):
+    rng = np.random.default_rng(23)
+    chunks = random_stream(rng, S)
+    ex = PipelinedExecutor(_cfg(), _registry(), key)
+    ex.run(chunks)
+    c = obm.counters(ex.state.metrics)
+    wm = ex.state.wm
+    assert int(np.sum(c["accepted"])) == int(wm.on_time) + int(wm.late)
+    assert int(np.sum(c["late"])) == int(wm.late)
+    assert int(np.sum(c["dropped"])) == int(wm.dropped)
+    assert int(np.sum(c["ingested"])) == c["items"]
+    assert np.array_equal(c["ingested"], c["accepted"] + c["dropped"])
+
+
+def test_reset_clears_device_counters(key):
+    """Counter reset semantics follow executor.reset(): a reset starts a
+    new stream with zeroed counters (and a fresh run_meta event), while
+    the attached Telemetry's host history is the operator's to keep."""
+    _, chunks = _stream(num_chunks=6)
+    log = EventLog()
+    ex = PipelinedExecutor(_cfg(), _registry(), key,
+                           telemetry=Telemetry(log))
+    ex.run(chunks)
+    assert obm.counters(ex.state.metrics)["items"] > 0
+    ex.reset(jax.random.PRNGKey(1))
+    c = obm.counters(ex.state.metrics)
+    assert c["items"] == 0 and c["chunks"] == 0
+    assert all(np.all(np.asarray(c[n]) == 0)
+               for n in ("ingested", "accepted", "late", "dropped",
+                         "replaced", "occupancy"))
+
+
+# ---------------------------------------------------------------------------
+# 3. Event log: schema round-trip, checkpoint costs, figure parity.
+# ---------------------------------------------------------------------------
+
+def test_event_log_jsonl_round_trip(key, tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    _, chunks = _stream()
+    with EventLog(path) as log:
+        ex = PipelinedExecutor(_cfg(emission="watermark",
+                                    allowed_lateness=0.25),
+                               _registry(), key,
+                               checkpointer=Checkpointer(every_chunks=4),
+                               telemetry=Telemetry(log))
+        ex.run(chunks)
+        in_memory = list(log.events)
+    back = read_events(path)              # validates every line
+    assert back == in_memory
+    types = {e["type"] for e in back}
+    assert {"run_meta", "emission", "watermark_close", "controller",
+            "checkpoint_save"} <= types
+    # Envelope: seq is the line number; every event passes the validator.
+    assert [e["seq"] for e in back] == list(range(len(back)))
+    for ev in back:
+        validate_event(ev)
+
+
+def test_event_validator_rejects_malformed():
+    with pytest.raises(ValueError, match="unknown event type"):
+        validate_event({"schema": 1, "type": "nope", "seq": 0})
+    with pytest.raises(ValueError, match="missing fields"):
+        validate_event({"schema": 1, "type": "checkpoint_save", "seq": 0})
+    with pytest.raises(ValueError, match="schema version"):
+        validate_event({"schema": 999, "type": "retrace", "seq": 0,
+                        "step": "s", "traces": 2, "allowed": 1})
+    with pytest.raises(ValueError, match="envelope"):
+        validate_event({"type": "retrace"})
+
+
+def test_checkpoint_save_restore_events(key):
+    _, chunks = _stream(num_chunks=8)
+    log = EventLog()
+    ex = PipelinedExecutor(_cfg(), _registry(), key,
+                           checkpointer=Checkpointer(every_chunks=2,
+                                                     keep=None),
+                           telemetry=Telemetry(log))
+    ex.run(chunks)
+    saves = log.of_type("checkpoint_save")
+    assert len(saves) == len(ex.checkpointer.saved)
+    for ev in saves:
+        assert ev["bytes"] > 0 and ev["serialize_s"] > 0.0
+        assert ev["drift_chunks"] == 0       # pipelined: exact cadence
+    ex.restore(ex.checkpointer.latest)
+    restores = log.of_type("checkpoint_restore")
+    assert len(restores) == 1 and restores[0]["restore_s"] > 0.0
+    assert restores[0]["stream_offset"] == ex.chunks_pushed
+    stats = obx.checkpoint_stats(log.events)
+    assert stats["saves"] == len(saves) and stats["restores"] == 1
+    assert stats["bytes_total"] == sum(ev["bytes"] for ev in saves)
+
+
+def test_staleness_from_log_matches_direct_computation(key):
+    """The acceptance criterion: ``repro.obs.summarize``'s staleness —
+    computed from the event log ALONE — equals the quantity the emission
+    figure computes directly from Emission records."""
+    cfg = _cfg(emission="watermark", allowed_lateness=0.25)
+    _, chunks = _stream(num_chunks=16, seed=9)
+    log = EventLog()
+    ex = PipelinedExecutor(cfg, _registry(), key,
+                           telemetry=Telemetry(log))
+    ems = ex.run(chunks)
+    assert len(ems) > 0
+    # Direct (figure-style): per closed interval, frontier progress past
+    # its close at the first covering emission.
+    direct = []
+    for em in ems:
+        close = np.float32((em.interval + 1) * cfg.interval_span)
+        for e2 in ems:
+            if np.float32(e2.watermark) >= close:
+                direct.append(float(np.float32(e2.watermark) - close))
+                break
+    from_log = obx.staleness_series(log.events)
+    assert from_log == direct
+    # And a cadence run's closed-interval derivation agrees with the
+    # watermark run's actual closes over the same stream.
+    clog = EventLog()
+    cex = PipelinedExecutor(_cfg(allowed_lateness=0.25), _registry(),
+                            key, telemetry=Telemetry(clog))
+    cex.run(chunks)
+    assert (obx.closed_intervals(clog.events)
+            == [em.interval for em in ems])
+
+
+def test_emission_events_carry_accuracy_series(key):
+    _, chunks = _stream()
+    log = EventLog()
+    ex = BatchedExecutor(_cfg(batch_chunks=3), _registry(), key,
+                         telemetry=Telemetry(log))
+    ems = ex.run(chunks)
+    hw = obx.half_width_series(log.events, "avg")
+    assert len(hw) == len(ems)
+    for ev, em in zip(log.of_type("emission"), ems):
+        assert ev["results"]["avg"]["hw95"] == pytest.approx(
+            float(em.results["avg"].error_bound(0.95)))
+        assert ev["results"]["total"]["value"] == pytest.approx(
+            float(em.results["total"].value))
+    with pytest.raises(KeyError):
+        obx.half_width_series(log.events, "nope")
+
+
+def test_summarize_cli_smoke(tmp_path, capsys):
+    from repro.obs import summarize
+    path = str(tmp_path / "smoke.jsonl")
+    assert summarize.main(["--smoke", path]) == 0
+    out = capsys.readouterr().out
+    assert "staleness" in out and "hw95" in out
+    # The generated log itself re-summarizes (file round-trip).
+    assert summarize.main([path]) == 0
+
+
+def test_prometheus_text_exposition(key):
+    _, chunks = _stream()
+    ex = PipelinedExecutor(_cfg(), _registry(), key,
+                           telemetry=Telemetry(EventLog()))
+    ex.run(chunks)
+    text = obx.prometheus_text(ex)
+    c = obm.counters(ex.state.metrics)
+    for s in range(S):
+        assert (f'repro_items_ingested_total{{stratum="{s}"}} '
+                f'{int(c["ingested"][s])}') in text
+        assert f'repro_reservoir_occupancy{{stratum="{s}"}}' in text
+    assert f"repro_chunks_total {c['chunks']}" in text
+    assert "repro_step_latency_seconds{quantile=\"0.95\"}" in text
+    assert f"repro_emissions_total {len(ex.emissions)}" in text
+
+
+# ---------------------------------------------------------------------------
+# 4. Retrace sentinel.
+# ---------------------------------------------------------------------------
+
+def test_sentinel_unit_budget_and_strict():
+    s = RetraceSentinel("t", allowed=1, strict=False)
+    s.trace()
+    assert s.violations == 0
+    with pytest.warns(RuntimeWarning, match="retraced after warmup"):
+        s.trace()
+    assert s.violations == 1
+    s.allow(2)      # cover the undeclared trace + one declared recompile
+    s.trace()
+    assert s.violations == 1
+    # Declaring BEFORE the recompile (the batched-executor pattern) never
+    # trips the guard.
+    fresh = RetraceSentinel("t1", allowed=0, strict=False)
+    fresh.allow(1)
+    fresh.trace()
+    assert fresh.violations == 0
+    strict = RetraceSentinel("t2", allowed=0, strict=True)
+    with pytest.raises(RetraceError):
+        strict.trace()
+
+
+def test_executor_retrace_detected_and_logged(key):
+    """A chunk-shape change retraces the hot step: non-strict telemetry
+    records a retrace event; strict mode raises."""
+    _, chunks = _stream(num_chunks=4)
+    log = EventLog()
+    tel = Telemetry(log, strict_retrace=False)
+    ex = PipelinedExecutor(_cfg(emit_every=10_000), _registry(), key,
+                           telemetry=tel)
+    for c in chunks:
+        ex.push(c)
+    odd = jax.tree.map(lambda x: x[: x.shape[0] // 2], chunks[0])
+    with pytest.warns(RuntimeWarning, match="retraced after warmup"):
+        ex.push(odd)
+    assert ex.trace_count == 2
+    rts = log.of_type("retrace")
+    assert len(rts) == 1 and rts[0]["step"] == "pipelined.step"
+
+    strict_ex = PipelinedExecutor(
+        _cfg(emit_every=10_000), _registry(), key,
+        telemetry=Telemetry(EventLog(), strict_retrace=True))
+    strict_ex.push(chunks[0])
+    with pytest.raises(RetraceError):
+        strict_ex.push(odd)
+
+
+def test_batched_resize_stays_in_sentinel_budget(key):
+    """Pressure-driven micro-batch resizes compile new scan shapes —
+    each declared via allow(), so the sentinel stays quiet."""
+    _, chunks = _stream(num_chunks=12)
+    from repro.runtime import ControllerConfig
+    cfg = _cfg(batch_chunks=2, max_batch_chunks=8,
+               controller=ControllerConfig(latency_budget_s=1e-9))
+    ex = BatchedExecutor(cfg, _registry(), key,
+                         telemetry=Telemetry(EventLog()))
+    ex.run(chunks)                        # resizes under pressure
+    sent = ex._sentinels["window_step"]
+    assert sent.traces >= 2               # at least two batch shapes
+    assert sent.violations == 0
+    assert sent.traces == len(ex._step_cache)
+
+
+# ---------------------------------------------------------------------------
+# Stream metering.
+# ---------------------------------------------------------------------------
+
+def test_metered_stream_counts_offered_load(key):
+    _, chunks = _stream(num_chunks=6, chunk_size=64)
+    metered = MeteredStream(chunks)
+    ex = PipelinedExecutor(_cfg(), _registry(), key)
+    ex.run(metered)
+    assert metered.chunks == 6
+    total_masked = sum(int(np.asarray(c.mask).sum()) for c in chunks)
+    assert metered.items == total_masked
+    c = obm.counters(ex.state.metrics)
+    assert c["items"] == metered.items and c["chunks"] == metered.chunks
+    assert metered.event_span > 0.0
+    assert metered.summary()["items"] == metered.items
