@@ -14,12 +14,24 @@ Sections:
 * fold-level:   jitted ``_ingest_chunk`` fused vs masked over K ∈
                 {4, 8, 16} and a chunk-size sweep — the headline ≥2×@K=8 /
                 ≥3×@K=16 acceptance numbers.
+* one-kernel:   the PR-7 single-Pallas-call ingest vs the fused-jnp path,
+                fold-level and end-to-end. Rows are labelled by execution
+                mode: ``interpret`` (mandatory; what this CPU container
+                can run — the Pallas emulator still traces to XLA under
+                jit, so these are real CPU numbers, just not the TPU
+                claim) and ``compiled`` (the lane the kernel exists for;
+                requires a TPU backend + ``REPRO_PALLAS_COMPILE=1``,
+                recorded as unavailable-with-reason otherwise — never
+                fabricated).
 * executor:     end-to-end items/s + emission step-latency p50/p99 for
                 both modes (batched / pipelined), sharded and not, on the
                 fused path with donated state buffers.
 
 Writes ``BENCH_ingest.json`` (to ``$BENCH_OUT`` or the CWD) in every
 lane — the ``--smoke`` CI job uploads it as the perf-trajectory artifact.
+The written file is re-read and validated against ``_validate_report``'s
+schema in every lane, so a refactor that silently drops a section fails
+CI instead of shipping a hollow artifact.
 """
 from __future__ import annotations
 
@@ -32,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import SMOKE, emit, param, time_call
+from repro.kernels import ops as kops
 from repro.runtime import (BatchedExecutor, PipelinedExecutor,
                            QueryRegistry, RuntimeConfig, init_state,
                            stamp_sharded, timestamped_stream)
@@ -71,19 +84,41 @@ def _fold_pair(k: int, chunk_size: int, key):
     return us_f, us_m
 
 
-def _assert_answers_identical(k: int, key) -> bool:
-    """Fused and masked executors must emit bitwise-identical answers —
-    the speedup may not change a single bit of output."""
+def _fold_onekernel(k: int, chunk_size: int, key) -> float:
+    """Median per-chunk latency of the jitted one-shot-kernel ingest."""
+    cfg = _cfg(k, ingest="onekernel")
+    state = init_state(cfg, key)
+    chunk = _chunks(1, chunk_size)[0]
+    fn = jax.jit(lambda st, ch: _ingest_chunk(cfg, st, ch))
+    return time_call(fn, state, chunk, warmup=2, iters=7)
+
+
+def _assert_answers_identical(k: int, other: str, key) -> bool:
+    """The ``other`` ingest path must emit answers bitwise-identical to
+    fused — a speedup may not change a single bit of output."""
     chunks = _chunks(param(16, 8), param(2048, 512))
     ef = BatchedExecutor(_cfg(k), _registry(), key).run(chunks)
-    em = BatchedExecutor(_cfg(k, ingest="masked"), _registry(),
+    eo = BatchedExecutor(_cfg(k, ingest=other), _registry(),
                          key).run(chunks)
-    for a, b in zip(ef, em):
+    for a, b in zip(ef, eo):
         if not np.array_equal(np.asarray(a.results["total"].value),
                               np.asarray(b.results["total"].value)):
             raise AssertionError(
-                f"fused/masked emission answers diverged at K={k}")
+                f"fused/{other} emission answers diverged at K={k}")
     return True
+
+
+def _compiled_lane():
+    """(available, reason) for compiled-kernel rows. Both gates must
+    hold; the reason string lands in the JSON so a reader knows why the
+    compiled numbers are absent instead of suspecting they were elided."""
+    backend = jax.default_backend()
+    if backend != "tpu":
+        return False, (f"jax backend is {backend!r}; compiled Pallas "
+                       "lowering needs a TPU")
+    if not kops.pallas_compile_enabled():
+        return False, "set REPRO_PALLAS_COMPILE=1 to lower the kernel"
+    return True, ""
 
 
 def _executor_stats(mode_cls, cfg, chunks, key):
@@ -108,6 +143,76 @@ def _executor_stats(mode_cls, cfg, chunks, key):
     }
 
 
+def _require(cond: bool, path: str, why: str) -> None:
+    if not cond:
+        raise ValueError(f"BENCH_ingest.json schema: {path}: {why}")
+
+
+def _validate_report(report: dict) -> None:
+    """Small structural schema for the artifact (run in EVERY lane,
+    including ``--smoke``): required keys present, numbers are finite
+    numerics, mode/fold/one-kernel sections nonempty, the bitwise
+    contracts asserted. Catches a refactor that silently drops a section
+    before CI uploads a hollow JSON."""
+    def num(d, key, path):
+        _require(key in d, f"{path}.{key}", "missing")
+        v = d[key]
+        _require(isinstance(v, (int, float)) and not isinstance(v, bool)
+                 and np.isfinite(v), f"{path}.{key}",
+                 f"expected finite number, got {v!r}")
+
+    for key in ("meta", "fold", "chunk_sweep_k8", "onekernel", "modes",
+                "answers_identical", "onekernel_identical"):
+        _require(key in report, key, "missing")
+    meta = report["meta"]
+    _require(isinstance(meta.get("smoke"), bool), "meta.smoke",
+             "expected bool")
+    _require(isinstance(meta.get("jax_backend"), str), "meta.jax_backend",
+             "expected str")
+    num(meta, "num_strata", "meta")
+    num(meta, "capacity", "meta")
+    _require(len(report["fold"]) > 0, "fold", "no rows")
+    for name, row in report["fold"].items():
+        for f in ("chunk_size", "fused_us", "masked_us", "speedup"):
+            num(row, f, f"fold.{name}")
+    _require(len(report["chunk_sweep_k8"]) > 0, "chunk_sweep_k8",
+             "no rows")
+    for i, row in enumerate(report["chunk_sweep_k8"]):
+        for f in ("chunk_size", "fused_us", "masked_us", "speedup"):
+            num(row, f, f"chunk_sweep_k8[{i}]")
+    ok = report["onekernel"]
+    interp_rows = {n: r for n, r in ok.get("interpret", {}).items()
+                   if isinstance(r, dict)}
+    _require(len(interp_rows) > 0, "onekernel.interpret",
+             "no rows (interpret-mode numbers are mandatory)")
+    for name, row in interp_rows.items():
+        for f in ("chunk_size", "onekernel_us", "fused_us",
+                  "speedup_vs_fused"):
+            num(row, f, f"onekernel.interpret.{name}")
+    comp = ok.get("compiled", {})
+    if comp.get("available") is False:
+        _require(isinstance(comp.get("reason"), str) and comp["reason"],
+                 "onekernel.compiled.reason",
+                 "unavailable lane must say why")
+    else:
+        _require(len(comp) > 0, "onekernel.compiled",
+                 "no rows and no unavailable-reason")
+        for name, row in comp.items():
+            for f in ("onekernel_us", "fused_us", "speedup_vs_fused"):
+                num(row, f, f"onekernel.compiled.{name}")
+    _require(len(report["modes"]) > 0, "modes", "no rows")
+    for name, row in report["modes"].items():
+        for f in ("items_per_s", "wall_s", "emissions",
+                  "step_latency_p50_ms", "step_latency_p99_ms"):
+            num(row, f, f"modes.{name}")
+    for want in ("batched_onekernel", "pipelined_onekernel"):
+        _require(want in report["modes"], f"modes.{want}", "missing")
+    _require(report["answers_identical"] is True, "answers_identical",
+             "fused/masked bitwise contract not asserted")
+    _require(report["onekernel_identical"] is True, "onekernel_identical",
+             "fused/onekernel bitwise contract not asserted")
+
+
 def run() -> list:
     rows = []
     key = jax.random.PRNGKey(0)
@@ -120,8 +225,10 @@ def run() -> list:
         },
         "fold": {},
         "chunk_sweep_k8": [],
+        "onekernel": {"interpret": {}, "compiled": {}},
         "modes": {},
         "answers_identical": False,
+        "onekernel_identical": False,
     }
 
     # --- fold-level: the headline fused-vs-masked ratio per ring size ---
@@ -154,10 +261,57 @@ def run() -> list:
             {"chunk_size": m, "fused_us": us_f, "masked_us": us_m,
              "speedup": us_m / us_f})
 
+    # --- one-kernel ingest: single Pallas call vs the fused-jnp path ---
+    def onekernel_lane(lane: str):
+        for k in (4, 8):
+            us_f, _ = _fold_pair(k, chunk_size, key)
+            us_o = _fold_onekernel(k, chunk_size, key)
+            rel = us_f / us_o       # >1 ⇒ the kernel wins
+            rows.append(emit(
+                f"ingest.fold.onekernel.{lane}.k{k}", us_o,
+                f"vs_fused={rel:.3f}x "
+                f"items_per_sec={chunk_size / (us_o / 1e6):.0f}"))
+            report["onekernel"][lane][f"k{k}"] = {
+                "chunk_size": chunk_size,
+                "onekernel_us": us_o,
+                "fused_us": us_f,
+                "speedup_vs_fused": rel,
+                "items_per_s_onekernel": chunk_size / (us_o / 1e6),
+            }
+
+    # Interpret rows are MANDATORY in every environment (they prove the
+    # path runs and track its trajectory) — force the env flag off for
+    # them so a compiled-capable host still records both lanes. Under
+    # jit the interpreter lowers to XLA, so these are honest CPU
+    # numbers; the compiled lane is the TPU claim.
+    saved = os.environ.get("REPRO_PALLAS_COMPILE")
+    os.environ["REPRO_PALLAS_COMPILE"] = "0"
+    try:
+        onekernel_lane("interpret")
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_PALLAS_COMPILE", None)
+        else:
+            os.environ["REPRO_PALLAS_COMPILE"] = saved
+    report["onekernel"]["interpret"]["note"] = (
+        "interpret-mode Pallas lowered through XLA on this backend; "
+        "CPU-scale numbers — see 'compiled' for the TPU lane")
+    avail, reason = _compiled_lane()
+    if avail:
+        onekernel_lane("compiled")
+    else:
+        report["onekernel"]["compiled"] = {
+            "available": False, "reason": reason}
+
     # --- identical answers (the acceptance contract) ---
-    report["answers_identical"] = _assert_answers_identical(8, key)
+    report["answers_identical"] = _assert_answers_identical(
+        8, "masked", key)
     rows.append(emit("ingest.answers_identical", 0.0,
                      "fused==masked bitwise"))
+    report["onekernel_identical"] = _assert_answers_identical(
+        8, "onekernel", key)
+    rows.append(emit("ingest.onekernel_identical", 0.0,
+                     "fused==onekernel bitwise"))
 
     # --- executor end-to-end: both modes, sharded and not ---
     n_chunks, m = param(24, 8), param(2048, 512)
@@ -185,12 +339,22 @@ def run() -> list:
             st["step_latency_p50_ms"] * 1e3,
             f"items_per_sec={st['items_per_s']:.0f} "
             f"p99_ms={st['step_latency_p99_ms']:.2f}"))
+        st = _executor_stats(cls, _cfg(8, ingest="onekernel"), chunks,
+                             jax.random.fold_in(key, 3))
+        report["modes"][f"{name}_onekernel"] = st
+        rows.append(emit(
+            f"ingest.mode.{name}.onekernel",
+            st["step_latency_p50_ms"] * 1e3,
+            f"items_per_sec={st['items_per_s']:.0f} "
+            f"p99_ms={st['step_latency_p99_ms']:.2f}"))
 
     out_dir = os.environ.get("BENCH_OUT", ".")
     out_path = os.path.join(out_dir, "BENCH_ingest.json")
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
-    print(f"# wrote {out_path}")
+    with open(out_path) as f:          # validate what actually landed
+        _validate_report(json.load(f))
+    print(f"# wrote {out_path} (schema OK)")
     return rows
 
 

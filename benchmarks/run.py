@@ -42,7 +42,7 @@ def main(argv=None) -> None:
         ("runtime modes: batched vs pipelined", fig_runtime_modes),
         ("recovery: checkpoint overhead + replay latency", fig_recovery),
         ("emission: staleness, cadence vs watermark", fig_emission),
-        ("ingest hot path: fused vs masked-vmap", bench_ingest),
+        ("ingest hot path: fused vs masked-vmap vs one-kernel", bench_ingest),
         ("observability: telemetry overhead", bench_obs),
         ("kernel bench", bench_kernels),
         ("training-plane bench", bench_train),

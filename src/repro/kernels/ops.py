@@ -8,6 +8,7 @@ interpreter would be slow).
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -16,11 +17,27 @@ import jax.numpy as jnp
 from repro.core import oasrs
 from repro.core.oasrs import OASRSState
 from repro.kernels import ref
-from repro.kernels.reservoir import default_interpret, reservoir_fold
+from repro.kernels import reservoir as _reservoir
+from repro.kernels.reservoir import reservoir_fold
 from repro.kernels.stratified_stats import stratified_stats
 from repro.kernels.weighted_hist import weighted_hist
 
-_interpret = default_interpret     # single source of truth (reservoir.py)
+
+def pallas_compile_enabled() -> bool:
+    """``REPRO_PALLAS_COMPILE=1`` — lower the Pallas kernels for real
+    (TPU). The ONE place the env var is parsed; every kernel wrapper and
+    ``core/oasrs.default_backend`` route through here."""
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1"
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default shared by ALL kernel wrappers: on this CPU
+    container the kernel bodies run under the Pallas interpreter; set
+    ``REPRO_PALLAS_COMPILE=1`` on TPU to lower them for real."""
+    return not pallas_compile_enabled()
+
+
+_interpret = default_interpret     # single source of truth (this module)
 
 
 def stratum_moments(values: jax.Array, stratum_ids: jax.Array,
@@ -66,3 +83,14 @@ def oasrs_fold(state: OASRSState, stratum_ids: jax.Array,
     """
     return oasrs.update_chunk(state, stratum_ids, payload, mask,
                               backend="pallas", block_m=block_m)
+
+
+def one_shot_ingest(*args, interpret: Optional[bool] = None, **kwargs):
+    """Interpret-defaulted alias of :func:`reservoir.one_shot_ingest` —
+    the whole accepted-item ingest path (watermark route → slot reset →
+    (slot, stratum) cell → counter bump → replacement draw → ring write →
+    obs counters) as ONE Pallas call. The runtime's
+    ``RuntimeConfig.ingest="onekernel"`` path lands here."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _reservoir.one_shot_ingest(*args, interpret=interpret, **kwargs)

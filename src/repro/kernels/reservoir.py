@@ -19,19 +19,18 @@ The grid walks item tiles; reservoir/counter blocks use constant index maps
 from __future__ import annotations
 
 import functools
-import os
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Interpret-mode plumbing (REPRO_PALLAS_COMPILE parsing) lives in ONE
+# place: ``kernels/ops.default_interpret`` — this module's kernels take a
+# plain ``interpret`` flag and never read the environment themselves.
 
-def default_interpret() -> bool:
-    """Interpret-mode default: on this CPU container the kernel body runs
-    under the Pallas interpreter; set ``REPRO_PALLAS_COMPILE=1`` on TPU to
-    lower it for real. (Shared by ``kernels/ops.py`` and the
-    ``backend="pallas"`` path of ``core/oasrs.update_chunk``.)"""
-    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+_NEG_TIME = -3.0e38        # f32 -inf stand-in (mirrors runtime/watermark)
+_IMIN = -(2 ** 31) + 1
 
 
 def _fold_kernel(sid_ref, pay_ref, u_ref, uslot_ref, mask_ref,
@@ -121,3 +120,338 @@ def reservoir_fold(stratum_ids: jax.Array, payload: jax.Array,
       u_slot[None, :], mask[None, :], counts[None, :], capacity[None, :],
       values)
     return new_values, new_counts[0]
+
+
+# ---------------------------------------------------------------------------
+# One-shot ingest: the ENTIRE accepted-item path in a single kernel.
+# ---------------------------------------------------------------------------
+
+class OneShotResult(NamedTuple):
+    """Everything the runtime needs back from one ingest call."""
+    values: Any            # pytree of [K, S, N_max] ring payloads
+    counts: jax.Array      # [K, S] i32 cell arrival counts
+    capacity: jax.Array    # [K, S] i32 cell capacities (post slot reset)
+    slot_interval: jax.Array   # [K] i32 — interval now held per ring slot
+    max_time: jax.Array    # () f32 — event-time frontier after the chunk
+    open_interval: jax.Array   # () i32 — newest interval after the chunk
+    on_time: jax.Array     # () i32 cumulative watermark accounting
+    late: jax.Array        # () i32
+    dropped: jax.Array     # () i32
+    chunks: jax.Array      # () i32 — chunks folded (obs)
+    items: jax.Array       # () i32 — masked items folded (obs)
+    counters: jax.Array    # [6, S] i32 obs rows: ingested/accepted/late/
+    #                        dropped/replaced/occupancy (metrics layout)
+
+
+def _one_shot_kernel(*refs, block_m: int, n_pay: int, k: int, s: int,
+                     span: float, lateness: float):
+    """Two-phase grid over item tiles; everything else VMEM-pinned.
+
+    Phase 0 scans the time/mask tiles to land the post-chunk frontier
+    (``max_time``/``open_interval``) — the chunk-level max must be known
+    before item 0's eviction verdict, so one pass cannot work. Phase 1
+    resets recycled ring slots (tile 0), then streams item tiles through
+    the sequential Vitter fold (the per-item counter → acceptance → slot
+    chain), folding the per-stratum obs counter rows in place; the final
+    tile derives the replacement/occupancy rows from the pre/post cell
+    counts. All ring/counter/accounting blocks use constant index maps —
+    revisited blocks persist in VMEM across the whole grid (TPU grids are
+    sequential on a core) and alias their outputs, so the [K·S, N_max]
+    ring never round-trips to HBM mid-chunk.
+    """
+    times_ref, sid_ref = refs[0], refs[1]
+    pay_refs = refs[2:2 + n_pay]
+    (ua_ref, us_ref, mask_ref, tin_ref, iin_ref, siv_ref, adopt_ref,
+     cin_ref, capin_ref) = refs[2 + n_pay:11 + n_pay]
+    vin_refs = refs[11 + n_pay:11 + 2 * n_pay]
+    min_ref = refs[11 + 2 * n_pay]
+    vout_refs = refs[12 + 2 * n_pay:12 + 3 * n_pay]
+    (cnt_ref, cap_ref, des_ref, sf_ref, si_ref,
+     mout_ref) = refs[12 + 3 * n_pay:]
+
+    phase = pl.program_id(0)
+    i = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+    span_f = jnp.float32(span)
+
+    @pl.when((phase == 0) & (i == 0))
+    def _seed_frontier():
+        sf_ref[...] = tin_ref[...]
+        si_ref[...] = iin_ref[...]
+
+    @pl.when(phase == 0)
+    def _scan_frontier():
+        t = times_ref[0, :]
+        mk = mask_ref[0, :]
+        tgt = jnp.floor(t / span_f).astype(jnp.int32)
+        sf_ref[0, 0] = jnp.maximum(
+            sf_ref[0, 0], jnp.max(jnp.where(mk, t, jnp.float32(_NEG_TIME))))
+        si_ref[0, 0] = jnp.maximum(
+            si_ref[0, 0], jnp.max(jnp.where(mk, tgt, jnp.int32(_IMIN))))
+
+    @pl.when(phase == 1)
+    def _fold():
+        new_open = si_ref[0, 0]
+        open_before = iin_ref[0, 0]
+        wmark = tin_ref[0, 0] - jnp.float32(lateness)  # PRE-chunk watermark
+        oldest_live = new_open - jnp.int32(k) + 1
+
+        @pl.when(i == 0)
+        def _reset_ring():
+            # Slot j's desired occupant is the newest live interval
+            # congruent to it mod K; a recycled slot zeroes its counts and
+            # adopts the controller capacity (precomputed, N_max-clamped).
+            cells = jax.lax.broadcasted_iota(jnp.int32, (1, k * s), 1)
+            desired_c = new_open - jnp.mod(new_open - cells // s, k)
+            reset = desired_c != siv_ref[...]
+            cnt_ref[...] = jnp.where(reset, 0, cin_ref[...])
+            cap_ref[...] = jnp.where(reset, adopt_ref[...], capin_ref[...])
+            slots = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+            des_ref[...] = new_open - jnp.mod(new_open - slots, k)
+            for vo, vi in zip(vout_refs, vin_refs):
+                vo[...] = vi[...]
+            mout_ref[...] = min_ref[...]
+            si_ref[0, 5] = si_ref[0, 5] + 1          # obs: chunks folded
+
+        # Vectorized routing + accounting over this tile (the watermark
+        # verdicts are per item, so no sequential dependency here).
+        t = times_ref[0, :]
+        sid = sid_ref[0, :]
+        mk = mask_ref[0, :]
+        tgt = jnp.floor(t / span_f).astype(jnp.int32)
+        acc = mk & ~(t < wmark) & ~(tgt < oldest_live)
+        late_v = acc & (tgt < open_before)
+        strata = jax.lax.broadcasted_iota(jnp.int32, (block_m, s), 1)
+        hot = sid[:, None] == strata                       # [BM, S]
+
+        def rows(pred):
+            return jnp.sum((hot & pred[:, None]).astype(jnp.int32),
+                           axis=0, keepdims=True)          # [1, S]
+
+        mout_ref[0:1, :] = mout_ref[0:1, :] + rows(mk)          # ingested
+        mout_ref[1:2, :] = mout_ref[1:2, :] + rows(acc)         # accepted
+        mout_ref[2:3, :] = mout_ref[2:3, :] + rows(late_v)      # late
+        mout_ref[3:4, :] = mout_ref[3:4, :] + rows(mk & ~acc)   # dropped
+
+        def total(pred):
+            return jnp.sum(pred.astype(jnp.int32))
+
+        si_ref[0, 1] = si_ref[0, 1] + total(acc & (tgt >= open_before))
+        si_ref[0, 2] = si_ref[0, 2] + total(late_v)
+        si_ref[0, 3] = si_ref[0, 3] + total(mk & ~acc)
+        si_ref[0, 4] = si_ref[0, 4] + total(mk)
+
+        # Sequential Vitter fold (counter → acceptance → slot per item);
+        # its latency hides behind the DMA of the next item tile.
+        def body(j, _):
+            tj = times_ref[0, j]
+            tgt_j = jnp.floor(tj / span_f).astype(jnp.int32)
+            live = (mask_ref[0, j] & ~(tj < wmark)
+                    & ~(tgt_j < oldest_live))
+            cell = jnp.mod(tgt_j, k) * s + sid_ref[0, j]
+            c = cnt_ref[0, cell] + 1
+            cap = cap_ref[0, cell]
+            filling = c <= cap
+            u = ua_ref[0, j]
+            accept = live & (filling | (u * c.astype(jnp.float32)
+                                        < cap.astype(jnp.float32)))
+            rslot = jnp.floor(
+                us_ref[0, j] * cap.astype(jnp.float32)).astype(jnp.int32)
+            rslot = jnp.clip(rslot, 0, jnp.maximum(cap - 1, 0))
+            slot = jnp.where(filling, c - 1, rslot)
+            for vo, po in zip(vout_refs, pay_refs):
+                old = vo[cell, slot]
+                vo[cell, slot] = jnp.where(accept, po[0, j], old)
+            cnt_ref[0, cell] = jnp.where(live, c, c - 1)
+            return ()
+
+        jax.lax.fori_loop(0, block_m, body, ())
+
+        @pl.when(i == n_tiles - 1)
+        def _finalize_counters():
+            # replaced[s] = arrivals that hit a FULL cell; occupancy[s] =
+            # Σ_K min(count, cap) — both from the pre/post-fold counts
+            # (the pre-fold counts are re-derived from the pristine input
+            # block + the reset verdict, which is cheaper than an extra
+            # [1, K·S] scratch output).
+            cells = jax.lax.broadcasted_iota(jnp.int32, (1, k * s), 1)
+            desired_c = new_open - jnp.mod(new_open - cells // s, k)
+            reset = desired_c != siv_ref[...]
+            c0 = jnp.where(reset, 0, cin_ref[...])
+            c1 = cnt_ref[...]
+            cp = cap_ref[...]
+            f0 = jnp.minimum(c0, cp)
+            f1 = jnp.minimum(c1, cp)
+            repl = (c1 - c0) - (f1 - f0)                   # [1, K·S]
+            racc = jnp.zeros((1, s), jnp.int32)
+            occ = jnp.zeros((1, s), jnp.int32)
+            for kk in range(k):                            # static K slices
+                racc = racc + repl[:, kk * s:(kk + 1) * s]
+                occ = occ + f1[:, kk * s:(kk + 1) * s]
+            mout_ref[4:5, :] = mout_ref[4:5, :] + racc     # replaced
+            mout_ref[5:6, :] = occ                         # occupancy gauge
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("span", "allowed_lateness", "block_m", "interpret"))
+def one_shot_ingest(times: jax.Array, stratum_ids: jax.Array, payload,
+                    mask: jax.Array, u_accept: jax.Array,
+                    u_slot: jax.Array, *,
+                    max_time: jax.Array, open_interval: jax.Array,
+                    on_time: jax.Array, late: jax.Array,
+                    dropped: jax.Array, chunks: jax.Array,
+                    items: jax.Array, slot_interval: jax.Array,
+                    adopt: jax.Array, counts: jax.Array,
+                    capacity: jax.Array, values, counters: jax.Array,
+                    span: float, allowed_lateness: float,
+                    block_m: int = 256,
+                    interpret: bool = False) -> OneShotResult:
+    """ONE Pallas call for the whole accepted-item ingest path.
+
+    Fuses watermark routing → interval-ring slot reset → (slot, stratum)
+    cell assignment → per-cell counter bump → replacement draw →
+    conditional ring write → obs counter fold for an M-item chunk, with
+    item tiles double-buffered from HBM and the [K·S, N_max] ring +
+    counters + accounting pinned in VMEM across tiles (constant index
+    maps + ``input_output_aliases``, extending the ``reservoir_fold``
+    aliasing so the ring never round-trips).
+
+    Bitwise contract: identical to the runtime's fused-jnp path —
+    routing is ``watermark.route_chunk``'s arithmetic (f32 frontier max,
+    pre-chunk watermark, ring eviction), the fold is ``reservoir_fold``'s
+    exact sequential Vitter semantics with the same ``floor(u·N_i)``
+    replacement-slot convention, and the counter rows reproduce
+    ``obs/metrics.ingest_update``. The uniforms are drawn OUTSIDE
+    (counter-based PRNG) so the kernel is deterministic and replayable.
+
+    Args:
+      times / stratum_ids / mask / u_accept / u_slot: ``[M]`` item tiles.
+      payload: pytree of ``[M]`` leaves (scalar payloads; int leaves ride
+        along — heavy-hitter keys), structure matching ``values``.
+      max_time, open_interval, on_time, late, dropped: pre-chunk
+        watermark scalars (``WatermarkState`` + open interval).
+      chunks, items: pre-chunk obs scalar totals.
+      slot_interval: ``[K]`` i32 — interval currently held per ring slot.
+      adopt: ``[S]`` i32 — capacity a reset slot adopts (already clamped
+        to ``N_max`` by the caller).
+      counts / capacity: ``[K, S]`` i32 cell counters.
+      values: pytree of ``[K, S, N_max]`` ring payloads.
+      counters: ``[6, S]`` i32 obs rows (``obs.metrics.stack_counters``).
+      span / allowed_lateness: static event-time geometry.
+
+    Returns:
+      :class:`OneShotResult` — the post-chunk ring, watermark scalars and
+      obs counters (the full ``RuntimeState`` delta minus the PRNG key,
+      which the caller advances with the same split schedule as the
+      fused path).
+    """
+    pay_leaves, pay_def = jax.tree_util.tree_flatten(payload)
+    val_leaves, val_def = jax.tree_util.tree_flatten(values)
+    if pay_def != val_def:
+        raise ValueError(
+            f"payload structure {pay_def} != values structure {val_def}")
+    n_pay = len(pay_leaves)
+    k = slot_interval.shape[0]
+    if counts.shape[0] != k:
+        raise ValueError(f"counts {counts.shape} vs K={k} ring")
+    s = counts.shape[1]
+    n_max = val_leaves[0].shape[-1]
+    m = times.shape[0]
+    for pv, vv in zip(pay_leaves, val_leaves):
+        if vv.shape != (k, s, n_max):
+            raise ValueError(
+                "one_shot_ingest handles scalar payload layouts only "
+                f"([M] items into [K, S, N_max] rings); got values leaf "
+                f"{vv.shape}")
+        if pv.shape != (m,) or pv.dtype != vv.dtype:
+            raise ValueError(
+                f"payload leaf {pv.shape}/{pv.dtype} does not match "
+                f"items [{m}] / values dtype {vv.dtype}")
+
+    pad = (-m) % block_m
+    if pad:
+        times = jnp.pad(times, (0, pad))
+        stratum_ids = jnp.pad(stratum_ids, (0, pad))
+        pay_leaves = [jnp.pad(p, (0, pad)) for p in pay_leaves]
+        mask = jnp.pad(mask, (0, pad))          # pad False: inert items
+        u_accept = jnp.pad(u_accept, (0, pad))
+        u_slot = jnp.pad(u_slot, (0, pad))
+    n_tiles = (m + pad) // block_m
+    grid = (2, n_tiles)
+
+    i32 = jnp.int32
+    z = jnp.zeros((), i32)
+    ints_in = jnp.stack([
+        jnp.asarray(open_interval, i32), jnp.asarray(on_time, i32),
+        jnp.asarray(late, i32), jnp.asarray(dropped, i32),
+        jnp.asarray(items, i32), jnp.asarray(chunks, i32), z, z])[None, :]
+    tin = jnp.asarray(max_time, jnp.float32).reshape(1, 1)
+    siv_c = jnp.repeat(slot_interval.astype(i32), s)[None, :]  # per cell
+    adopt_c = jnp.tile(adopt.astype(i32), k)[None, :]          # per cell
+    cin = counts.reshape(1, k * s)
+    capin = capacity.reshape(1, k * s)
+    vflat = [v.reshape(k * s, n_max) for v in val_leaves]
+
+    # Item tiles needed in BOTH phases stream (0, i); fold-only tiles pin
+    # to block 0 during phase 0 so the frontier scan fetches no dead DMA.
+    stream = lambda: pl.BlockSpec((1, block_m), lambda p, i: (0, i))
+    foldonly = lambda: pl.BlockSpec((1, block_m), lambda p, i: (0, i * p))
+
+    def pinned(*shape):
+        return pl.BlockSpec(shape, lambda p, i: (0,) * len(shape))
+
+    in_specs = ([stream(), foldonly()]
+                + [foldonly() for _ in range(n_pay)]
+                + [foldonly(), foldonly(), stream(),
+                   pinned(1, 1), pinned(1, 8), pinned(1, k * s),
+                   pinned(1, k * s), pinned(1, k * s), pinned(1, k * s)]
+                + [pinned(k * s, n_max) for _ in range(n_pay)]
+                + [pinned(6, s)])
+    out_specs = ([pinned(k * s, n_max) for _ in range(n_pay)]
+                 + [pinned(1, k * s), pinned(1, k * s), pinned(1, k),
+                    pinned(1, 1), pinned(1, 8), pinned(6, s)])
+    out_shape = ([jax.ShapeDtypeStruct((k * s, n_max), v.dtype)
+                  for v in val_leaves]
+                 + [jax.ShapeDtypeStruct((1, k * s), i32),
+                    jax.ShapeDtypeStruct((1, k * s), i32),
+                    jax.ShapeDtypeStruct((1, k), i32),
+                    jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                    jax.ShapeDtypeStruct((1, 8), i32),
+                    jax.ShapeDtypeStruct((6, s), i32)])
+    # In-place hot path, extending reservoir_fold's aliasing to EVERY
+    # carried block: ring leaves, cell counters/capacities, watermark
+    # scalars and obs rows all mutate their (donated) input buffers.
+    aliases = {11 + n_pay + j: j for j in range(n_pay)}     # ring leaves
+    aliases[9 + n_pay] = n_pay                              # counts
+    aliases[10 + n_pay] = n_pay + 1                         # capacity
+    aliases[5 + n_pay] = n_pay + 3                          # frontier f32
+    aliases[6 + n_pay] = n_pay + 4                          # scalars i32
+    aliases[11 + 2 * n_pay] = n_pay + 5                     # obs rows
+
+    kernel = functools.partial(_one_shot_kernel, block_m=block_m,
+                               n_pay=n_pay, k=k, s=s, span=span,
+                               lateness=allowed_lateness)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(times[None, :], stratum_ids[None, :],
+      *[p[None, :] for p in pay_leaves],
+      u_accept[None, :], u_slot[None, :], mask[None, :],
+      tin, ints_in, siv_c, adopt_c, cin, capin, *vflat, counters)
+
+    vout = outs[:n_pay]
+    cnt, cap, des, sf, si, mrows = outs[n_pay:]
+    return OneShotResult(
+        values=jax.tree_util.tree_unflatten(
+            val_def, [o.reshape(k, s, n_max) for o in vout]),
+        counts=cnt.reshape(k, s), capacity=cap.reshape(k, s),
+        slot_interval=des[0], max_time=sf[0, 0],
+        open_interval=si[0, 0], on_time=si[0, 1], late=si[0, 2],
+        dropped=si[0, 3], items=si[0, 4], chunks=si[0, 5],
+        counters=mrows)

@@ -14,6 +14,10 @@ live in VMEM across sequential grid steps (TPU grids execute in order on a
 core, so revisited output blocks act as accumulators). Arithmetic intensity:
 3·S FLOPs per item-byte — compute-bound on the MXU for S ≥ 64, which is why
 this beats the HBM-bound scatter formulation.
+
+Interpret-vs-compiled is NOT decided here: callers (``kernels/ops``)
+pass ``interpret=ops.default_interpret()`` — the single
+``REPRO_PALLAS_COMPILE`` parse shared by every kernel wrapper.
 """
 from __future__ import annotations
 

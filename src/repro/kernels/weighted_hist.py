@@ -18,6 +18,10 @@ The two ``[S, B]`` accumulators stay resident in VMEM across sequential
 grid steps (revisited output blocks persist — TPU grids run in order on a
 core); the bin edges ride along as a tiny constant-index-map input. The
 last bin is right-closed so ``edges[-1]`` itself is counted.
+
+Interpret-vs-compiled is NOT decided here: callers (``kernels/ops``)
+pass ``interpret=ops.default_interpret()`` — the single
+``REPRO_PALLAS_COMPILE`` parse shared by every kernel wrapper.
 """
 from __future__ import annotations
 

@@ -110,6 +110,31 @@ def ingest_update(m: MetricsState, num_strata: int,
         items=m.items + jnp.sum(mask.astype(jnp.int32)))
 
 
+#: Row order of the ``[6, S]`` counter tile the one-shot ingest kernel
+#: folds in place (``kernels/reservoir.one_shot_ingest``) — the
+#: per-stratum fields of :class:`MetricsState`, scalars excluded.
+COUNTER_FIELDS = ("ingested", "accepted", "late", "dropped",
+                  "replaced", "occupancy")
+
+
+def stack_counters(m: MetricsState) -> jax.Array:
+    """``[6, S]`` row-stack of the per-stratum counters in
+    ``COUNTER_FIELDS`` order — the device tile handed to (and aliased
+    inside) the one-shot ingest kernel."""
+    return jnp.stack([getattr(m, name) for name in COUNTER_FIELDS])
+
+
+def unstack_counters(rows: jax.Array, chunks: jax.Array,
+                     items: jax.Array) -> MetricsState:
+    """Rebuild a :class:`MetricsState` from the kernel's ``[6, S]`` tile
+    plus the scalar totals it carries separately. Each row is copied into
+    its own buffer (``+ 0``) so the executors' whole-state donation never
+    sees two leaves aliasing one allocation."""
+    fields = {name: rows[idx] + 0
+              for idx, name in enumerate(COUNTER_FIELDS)}
+    return MetricsState(chunks=chunks, items=items, **fields)
+
+
 def export(m: MetricsState) -> dict:
     """Plain-python view (checkpoint manifest / JSON events)."""
     return {f.name: np.asarray(getattr(m, f.name)).tolist()

@@ -42,6 +42,7 @@ import numpy as np
 from repro.core import distributed as dist
 from repro.core import error as err
 from repro.core import oasrs
+from repro.kernels import ops as kops
 from repro.core import quantile as qt
 from repro.core import window as win
 from repro.obs import metrics as obm
@@ -70,7 +71,11 @@ class RuntimeConfig:
     max_batch_chunks: int = 32
     emit_every: int = 4                # pipelined mode: chunks per emission
     backend: Optional[str] = None      # reservoir fold: "jnp"|"pallas"|auto
-    ingest: str = "fused"              # "fused" single-pass | "masked" legacy
+    ingest: str = "fused"              # "fused" single-pass | "masked"
+    #   legacy | "onekernel" — the whole accepted-item path (routing, slot
+    #   reset, cell assignment, counter bump, replacement draw, ring
+    #   write, obs counters) in ONE Pallas call with the ring pinned in
+    #   VMEM (kernels/reservoir.one_shot_ingest; bitwise == "fused").
     emission: str = "cadence"          # "cadence" chunk-count | "watermark"
     #   cadence   — emissions on the driver loop's chunk count (batched:
     #               per micro-batch flush; pipelined: every emit_every).
@@ -228,9 +233,11 @@ def _ingest_chunk(cfg: RuntimeConfig, state: RuntimeState,
     """
     if cfg.ingest == "masked":
         return _ingest_chunk_masked(cfg, state, chunk)
+    if cfg.ingest == "onekernel":
+        return _ingest_chunk_onekernel(cfg, state, chunk)
     if cfg.ingest != "fused":
         raise ValueError(f"unknown ingest path {cfg.ingest!r}; "
-                         "expected 'fused' or 'masked'")
+                         "expected 'fused', 'masked' or 'onekernel'")
     k, s_cnt = cfg.num_intervals, cfg.num_strata
     r, iv, desired = _route_and_reset(cfg, state, chunk)
     counts_before = iv.counts
@@ -260,6 +267,55 @@ def _ingest_chunk(cfg: RuntimeConfig, state: RuntimeState,
         counts=flat.counts.reshape(k, s_cnt),
         key=iv.key.at[0].set(flat.key))
     return _finish_ingest(cfg, state, chunk, r, iv, desired, counts_before)
+
+
+def _ingest_chunk_onekernel(cfg: RuntimeConfig, state: RuntimeState,
+                            chunk: TimestampedChunk) -> RuntimeState:
+    """One-shot Pallas ingest: everything ``_ingest_chunk`` (fused) does
+    — watermark routing, slot reset, (slot, stratum) cell assignment,
+    counter bump, replacement draw, conditional ring write AND the obs
+    counter fold — inside ONE kernel call, with the [K·S, N_max] ring,
+    cell counters and counter rows pinned in VMEM across item tiles
+    (``kernels/reservoir.one_shot_ingest``).
+
+    Bitwise-interchangeable with the fused path: the uniforms come from
+    the SAME ``split(lead_key, 3)`` schedule, the kernel keeps the
+    ``floor(u·N_i)`` replacement-slot convention, and the counter rows
+    reproduce ``obs/metrics.ingest_update`` — so answers, Eq. 5–9 widths,
+    obs counters and crash/restore sweeps are identical (asserted in
+    ``tests/test_onekernel.py``).
+    """
+    k = cfg.num_intervals
+    iv = state.window.intervals
+    m = chunk.stratum_ids.shape[0]
+    key, k_u, k_slot = jax.random.split(iv.key[0], 3)
+    u_accept = jax.random.uniform(k_u, (m,))
+    u_slot = jax.random.uniform(k_slot, (m,))
+    n_max = jax.tree_util.tree_leaves(iv.values)[0].shape[2]
+    adopt = jnp.minimum(state.ctrl.capacity, jnp.int32(n_max))
+    out = kops.one_shot_ingest(
+        chunk.times, chunk.stratum_ids.astype(jnp.int32), chunk.values,
+        chunk.mask, u_accept, u_slot,
+        max_time=state.wm.max_time, open_interval=state.open_interval,
+        on_time=state.wm.on_time, late=state.wm.late,
+        dropped=state.wm.dropped, chunks=state.metrics.chunks,
+        items=state.metrics.items, slot_interval=state.slot_interval,
+        adopt=adopt, counts=iv.counts, capacity=iv.capacity,
+        values=iv.values, counters=obm.stack_counters(state.metrics),
+        span=cfg.interval_span, allowed_lateness=cfg.allowed_lateness)
+    window = win.WindowState(
+        intervals=oasrs.OASRSState(
+            values=out.values, counts=out.counts, capacity=out.capacity,
+            key=iv.key.at[0].set(key)),
+        cursor=jnp.mod(out.open_interval + 1, k),
+        filled=jnp.minimum(out.open_interval + 1, k))
+    wm = wmk.WatermarkState(max_time=out.max_time, on_time=out.on_time,
+                            late=out.late, dropped=out.dropped)
+    metrics = obm.unstack_counters(out.counters, chunks=out.chunks,
+                                   items=out.items)
+    return RuntimeState(window=window, slot_interval=out.slot_interval,
+                        open_interval=out.open_interval, wm=wm,
+                        ctrl=state.ctrl, metrics=metrics)
 
 
 def _ingest_chunk_masked(cfg: RuntimeConfig, state: RuntimeState,

@@ -94,7 +94,12 @@ class WatermarkState:
 
 
 def init() -> WatermarkState:
-    return WatermarkState(max_time=_NEG,
+    # max_time gets a FRESH buffer per state: the one-shot ingest kernel
+    # aliases the frontier input to its output, so under step donation
+    # the buffer is genuinely consumed — handing every state the shared
+    # module constant would let one run's donation delete it for all
+    # later ``init()`` calls.
+    return WatermarkState(max_time=jnp.full((), NEG_TIME, jnp.float32),
                           on_time=jnp.zeros((), jnp.int32),
                           late=jnp.zeros((), jnp.int32),
                           dropped=jnp.zeros((), jnp.int32))
