@@ -26,7 +26,7 @@ def main(argv=None) -> None:
         os.environ["BENCH_SMOKE"] = "1"
 
     from benchmarks import (bench_ingest, bench_kernels, bench_obs,
-                            bench_train, fig5_microbench,
+                            bench_scaleout, bench_train, fig5_microbench,
                             fig6_rates_windows, fig7_scale_skew,
                             fig8_means_over_time, fig9_network_traffic,
                             fig10_taxi, fig_emission, fig_quantiles,
@@ -43,6 +43,7 @@ def main(argv=None) -> None:
         ("recovery: checkpoint overhead + replay latency", fig_recovery),
         ("emission: staleness, cadence vs watermark", fig_emission),
         ("ingest hot path: fused vs masked-vmap vs one-kernel", bench_ingest),
+        ("scale-out: mesh throughput + elastic rescale", bench_scaleout),
         ("observability: telemetry overhead", bench_obs),
         ("kernel bench", bench_kernels),
         ("training-plane bench", bench_train),

@@ -207,3 +207,63 @@ def split_capacity(total_capacity: jax.Array, num_shards: int) -> jax.Array:
     """Per-worker reservoir size ``N_i / w`` (ceil so Σ ≥ N_i)."""
     return jnp.maximum(
         (total_capacity + num_shards - 1) // num_shards, 1).astype(jnp.int32)
+
+
+def gather_cells(view: qt.SampleView, aux: jax.Array,
+                 axis_name: str, num_shards: int) -> tuple:
+    """The mesh emission merge: ONE collective per emission.
+
+    Called inside ``shard_map``.  Each device holds its shard's local
+    merged view — ``values [G, N]`` f32, ``counts``/``taken [G]`` i32 —
+    plus a flat u32 ``aux`` vector (PRNG lead key, slot→interval
+    assignments, liveness bits…).  A single tiled ``all_gather`` over
+    ``axis_name`` concatenates the shards in shard-index order,
+    reproducing bitwise the vmap oracle's host-side
+    ``[W, G, N] → [W·G, N]`` reshape-concat, with the aux payload riding
+    the same collective in padded tail rows — so every device sees every
+    shard's aux (e.g. shard 0's lead key seeds the emission PRNG
+    identically everywhere; under shard_map each device would otherwise
+    only see its OWN shard's).
+
+    Integer payloads travel through ``bitcast_convert_type`` — the
+    collective only moves bytes, so i32/u32 words stay exact (an f32
+    cast would round above 2²⁴).
+
+    Returns ``(merged_view [W·G, N], aux_all [W, A] u32)``.
+    """
+    g, n = view.values.shape
+    f32 = jnp.float32
+    width = n + 2
+
+    def as_f32_col(x):
+        return jax.lax.bitcast_convert_type(
+            x.astype(jnp.int32), f32)[:, None]              # [G, 1]
+
+    packed = jnp.concatenate(
+        [view.values.astype(f32),
+         as_f32_col(view.counts),
+         as_f32_col(view.taken)], axis=-1)                  # [G, N+2]
+
+    a = aux.shape[0]
+    rows = -(-a // width)
+    aux_f = jax.lax.bitcast_convert_type(aux.astype(jnp.uint32), f32)
+    aux_f = jnp.concatenate(
+        [aux_f, jnp.zeros((rows * width - a,), f32)]).reshape(rows, width)
+    packed = jnp.concatenate([packed, aux_f], axis=0)       # [G+rows, N+2]
+
+    gathered = jax.lax.all_gather(
+        packed, axis_name, axis=0, tiled=True)
+    gathered = gathered.reshape(num_shards, g + rows, width)
+
+    cells = gathered[:, :g, :].reshape(num_shards * g, width)
+
+    def back_i32(col):
+        return jax.lax.bitcast_convert_type(col, jnp.int32)
+
+    merged = qt.SampleView(values=cells[:, :n],
+                           counts=back_i32(cells[:, n]),
+                           taken=back_i32(cells[:, n + 1]))
+    aux_all = jax.lax.bitcast_convert_type(
+        gathered[:, g:, :].reshape(num_shards, rows * width)[:, :a],
+        jnp.uint32)
+    return merged, aux_all

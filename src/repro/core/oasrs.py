@@ -102,8 +102,11 @@ def init(
         except Exception as e:
             raise ValueError(
                 "capacity is traced; pass static max_capacity=") from e
+    # broadcast_to is a no-op view when capacity is already a [S] i32 jax
+    # array — materialize a FRESH buffer so a donated step can never
+    # delete the caller's array (PR-7 shared-constant aliasing class).
     capacity = jnp.broadcast_to(
-        jnp.asarray(capacity, jnp.int32), (num_strata,))
+        jnp.asarray(capacity, jnp.int32), (num_strata,)) + 0
     values = jax.tree.map(
         lambda s: jnp.zeros((num_strata, max_capacity) + tuple(s.shape),
                             s.dtype),

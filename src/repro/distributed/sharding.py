@@ -22,42 +22,59 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Logical = Union[str, None, tuple]
 
+
+def _rules(*pairs) -> dict:
+    """Build a rules table, refusing duplicate logical-axis names.
+
+    A dict literal silently keeps only the LAST duplicate key — which is
+    exactly how ``kv_seq`` clobbered the flash-decode entry here — so
+    rule tables are assembled through this guard instead.
+    """
+    out: dict = {}
+    for name, phys in pairs:
+        if name in out:
+            raise ValueError(f"duplicate sharding rule {name!r}")
+        out[name] = phys
+    return out
+
+
 #: Default logical→physical rules. Order matters for tuples: the first
 #: mesh axis that divides the dim wins (others appended if they also fit).
-DEFAULT_RULES: dict = {
-    "batch": ("pod", "data"),       # DP over pods × data
-    "seq": None,                    # sequence kept local by default
-    "seq_sp": "model",              # sequence parallelism (opt-in)
-    "embed": None,                  # activations: d_model replicated
+DEFAULT_RULES: dict = _rules(
+    ("batch", ("pod", "data")),     # DP over pods × data
+    ("seq", None),                  # sequence kept local by default
+    ("seq_sp", "model"),            # sequence parallelism (opt-in)
+    ("embed", None),                # activations: d_model replicated
     # Weights' d_model dim is NEVER model-sharded: that would be
     # contracting-dim (row-parallel-everywhere) sharding, i.e. one
     # activation-sized psum per matmul (measured: 88s collective term on
     # phi4 — EXPERIMENTS.md §Perf iteration 2). Megatron pattern instead:
     # shard the OUTPUT dim of the in-projection (col-parallel) and the
     # INPUT dim of the out-projection (row-parallel) → one psum per block.
-    "embed_tp": None,
-    "q_heads": "model",             # TP over attention heads
-    "kv_heads": "model",            # TP over KV heads (when divisible)
-    "q_group": "model",             # TP over the GQA group dim (fallback 1)
-    "head_dim_tp": None,            # reserved (feature-sharded attention)
-    "attn_seq": None,               # sequence-parallel attention (fallback 2)
-    "kv_seq": None,                 # decode: flash-decode cache sharding
-    "seq_res": None,                # Megatron-SP residual stream (opt-in)
-    "head_dim": None,
-    "mlp": "model",                 # TP over FFN hidden
-    "vocab": "model",               # TP over vocab (embeds + logits)
-    "experts": "model",             # EP over experts
-    "expert_mlp": None,             # within-expert hidden
-    "moe_group": ("pod", "data", "model"),  # dispatch groups: every device
-                                    # owns whole groups, so routing/sort/
-                                    # scatter run fully partitioned and the
-                                    # expert exchange is a true all-to-all
-    "layers": None,                 # scan axis — never sharded
-    "rnn": "model",                 # recurrent width (RG-LRU, xLSTM)
-    "kv_seq": None,                 # KV-cache sequence axis
-    "frames": None,                 # audio/vision frontend positions
-    "stack": None,
-}
+    ("embed_tp", None),
+    ("q_heads", "model"),           # TP over attention heads
+    ("kv_heads", "model"),          # TP over KV heads (when divisible)
+    ("q_group", "model"),           # TP over the GQA group dim (fallback 1)
+    ("head_dim_tp", None),          # reserved (feature-sharded attention)
+    ("attn_seq", None),             # sequence-parallel attention (fallback 2)
+    ("kv_seq", None),               # KV-cache sequence axis; build_rules
+                                    # flips it to "model" for flash-decode
+                                    # cache sharding in TP modes 2/3
+    ("seq_res", None),              # Megatron-SP residual stream (opt-in)
+    ("head_dim", None),
+    ("mlp", "model"),               # TP over FFN hidden
+    ("vocab", "model"),             # TP over vocab (embeds + logits)
+    ("experts", "model"),           # EP over experts
+    ("expert_mlp", None),           # within-expert hidden
+    ("moe_group", ("pod", "data", "model")),  # dispatch groups: every
+                                    # device owns whole groups, so routing/
+                                    # sort/scatter run fully partitioned and
+                                    # the expert exchange is a true all-to-all
+    ("layers", None),               # scan axis — never sharded
+    ("rnn", "model"),               # recurrent width (RG-LRU, xLSTM)
+    ("frames", None),               # audio/vision frontend positions
+    ("stack", None),
+)
 
 
 class _Ctx(threading.local):

@@ -15,6 +15,31 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+#: Mesh axis name the streaming runtime shards over: one device per
+#: OASRS shard (the paper's embarrassingly-parallel workers, Alg. 2).
+STREAM_AXIS = "shard"
+
+
+def make_stream_mesh(num_shards: int):
+    """1-D ``(shard,)`` mesh for ``RuntimeConfig(placement="mesh")``.
+
+    One device per reservoir shard: ingest runs collective-free per
+    device and each emission performs exactly one gather-merge over this
+    axis.  Raises with the smoke-test recipe when the process doesn't
+    have enough devices (on CPU, device count is fixed at backend init
+    by ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    avail = len(jax.devices())
+    if avail < num_shards:
+        raise ValueError(
+            f"placement='mesh' needs {num_shards} devices, found {avail}; "
+            "on CPU export XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={num_shards} (or more) before the first jax import")
+    return jax.make_mesh((num_shards,), (STREAM_AXIS,))
+
+
 def make_smoke_mesh():
     """1-device mesh with the production axis names — lets the same
     annotated programs run on the CPU container for smoke tests."""

@@ -217,7 +217,11 @@ def restore_into(ex, ckpt: RuntimeCheckpoint) -> None:
                 "event-time/emission semantics would corrupt the "
                 "replayed answer stream")
     _validate_state(ex.state, ckpt.state)
-    ex.state = jax.device_put(ckpt.state)
+    # Through the executor's placement hook: under placement="mesh" the
+    # deserialized leaves land sharded over the stream mesh exactly like
+    # a fresh init_state — a restored mesh run must not silently fall
+    # back to single-device residence.
+    ex.state = ex._place_state(ckpt.state)
     ex.emissions = []
     ex.chunks_pushed = ckpt.stream_offset
     ex._emission_cursor = ckpt.emissions_done
@@ -263,6 +267,228 @@ def _validate_state(template, state) -> None:
             raise ValueError(
                 f"checkpoint leaf {name} has dtype {s_leaf.dtype}, "
                 f"executor expects {t_leaf.dtype}")
+
+
+# ---------------------------------------------------------------------------
+# Restore-time elastic rescale.
+# ---------------------------------------------------------------------------
+
+def _lr_split(total: int, parts: int) -> np.ndarray:
+    """Largest-remainder split of ``total`` over ``parts`` (deterministic:
+    the first ``total mod parts`` shards take the +1)."""
+    base, rem = divmod(int(total), parts)
+    out = np.full((parts,), base, np.int64)
+    out[:rem] += 1
+    return out
+
+
+def _bounded_fill(total: int, bounds: np.ndarray) -> np.ndarray:
+    """Distribute ``total`` units over shards, at most ``bounds[j]`` each —
+    deterministic round-robin so no shard is systematically starved."""
+    out = np.zeros(len(bounds), np.int64)
+    remaining = int(total)
+    while remaining > 0:
+        progressed = False
+        for j in range(len(bounds)):
+            if remaining > 0 and out[j] < bounds[j]:
+                out[j] += 1
+                remaining -= 1
+                progressed = True
+        if not progressed:
+            break
+    return out
+
+
+def _cell_seed(lead_key: np.ndarray, cell: int) -> int:
+    """Deterministic permutation seed per (lead key, cell) — keyed
+    subsampling, so replaying a migrate is bitwise."""
+    return int((int(lead_key[0]) * 1000003 + int(lead_key[1])
+                + 7919 * cell) % (2 ** 32))
+
+
+def migrate(ckpt: RuntimeCheckpoint, new_num_shards: int,
+            new_max_capacity: Optional[int] = None) -> RuntimeCheckpoint:
+    """Restore-time elastic rescale: re-key and re-pack a checkpoint's
+    per-shard reservoirs for a NEW shard count (and optionally a new
+    reservoir allocation ``N_max``) — the sanctioned relaxation of the
+    fingerprint refusal for exactly ``num_shards`` (re-written here) and
+    ``N_max`` (shape-only, re-validated against the new executor).
+
+    Per (interval × stratum) cell, over the shards whose ring slot holds
+    the canonical interval (with in-order sharded streams that is all of
+    them):
+
+    * arrival counts ``C = Σ c_w`` re-split over the new shards by
+      largest remainder (``Σ`` preserved exactly — the HT totals Eq. 5
+      sums are unchanged);
+    * the pooled live samples are permuted by a key derived from the old
+      ring's lead PRNG key (keyed deterministic subsampling — every
+      pooled sample has equal survival probability, preserving uniform
+      inclusion) and dealt contiguously to the new shards;
+    * adopted per-shard capacity is ``min(ceil(Σ cap_w / W'), N_max)`` —
+      the ceil re-split of :func:`repro.core.distributed.split_capacity`
+      hard-clamped to the slot buffer (the ceil SUM can exceed the
+      original total, e.g. N_max=7 at 2→3 shards: ceil(4+4 / 3) = 3 per
+      shard) — and a cell whose pool cannot fill the new count's worth
+      of samples adopts ``capacity = taken`` so the derived
+      ``taken = min(counts, capacity)`` invariant and the HT weight
+      ``counts / taken`` stay exact.
+
+    The watermark frontier pools to the global min (an interval is final
+    only once NO shard can accept items for it — the conservative
+    direction), arrival counters and stream totals re-pool into shard 0
+    (the ``Σ``-over-shards views are preserved exactly), the occupancy
+    gauge is recomputed from the new cells, and the controller's global
+    capacity re-splits like the reservoirs.  Host cursors (stream
+    offset, emission cursor, emitted-through, emission base key) pass
+    through untouched: the rescaled run CONTINUES the same output
+    sequence, and the crash harness proves recovery around every rescale
+    point stays bitwise exactly-once (``tests/harness_rescale.py``).
+    """
+    w_new = int(new_num_shards)
+    if w_new < 1:
+        raise ValueError(f"new_num_shards must be >= 1, got {w_new}")
+    w_old = int(ckpt.config["num_shards"])
+    state = jax.device_get(ckpt.state)
+    if w_old == 1:
+        state = jax.tree.map(lambda x: np.asarray(x)[None], state)
+    else:
+        state = jax.tree.map(np.asarray, state)
+
+    iv = state.window.intervals
+    k, s = iv.counts.shape[1], iv.counts.shape[2]
+    n_old = jax.tree_util.tree_leaves(iv.values)[0].shape[3]
+    n_new = n_old if new_max_capacity is None else int(new_max_capacity)
+    if n_new < 1:
+        raise ValueError(f"new_max_capacity must be >= 1, got {n_new}")
+
+    # Canonical ring geometry: the newest interval any shard saw wins;
+    # every new shard adopts the slot assignment the vmap runtime would
+    # derive from it (slot j holds the newest live interval ≡ j mod K).
+    open_new = int(np.max(state.open_interval))
+    slots = np.arange(k)
+    desired = (open_new - np.mod(open_new - slots, k)).astype(np.int32)
+
+    lead = np.asarray(iv.key).reshape(-1, iv.key.shape[-1])[0]
+    old_taken = np.minimum(iv.counts, iv.capacity)            # [W, K, S]
+
+    new_counts = np.zeros((w_new, k, s), np.int32)
+    new_cap = np.zeros((w_new, k, s), np.int32)
+    new_values = jax.tree.map(
+        lambda v: np.zeros((w_new, k, s, n_new) + v.shape[4:], v.dtype),
+        iv.values)
+    ov_leaves = jax.tree_util.tree_leaves(iv.values)
+    nv_leaves = jax.tree_util.tree_leaves(new_values)
+
+    for kk in range(k):
+        part = state.slot_interval[:, kk] == desired[kk]      # [W_old]
+        for ss in range(s):
+            cw = np.where(part, iv.counts[:, kk, ss], 0)
+            capw = np.where(part, iv.capacity[:, kk, ss], 0)
+            tw = np.where(part, old_taken[:, kk, ss], 0)
+            c_total, y_total = int(cw.sum()), int(tw.sum())
+            cap_total = int(capw.sum())
+            # split_capacity's ceil re-split, clamped to the slot buffer.
+            adopt = min(max(-(-cap_total // w_new), 1), n_new)
+            cj = _lr_split(c_total, w_new)
+            want = np.minimum(cj, adopt)
+            tj = want if int(want.sum()) <= y_total \
+                else _bounded_fill(y_total, want)
+            # Pool the live samples in shard order, permute (keyed), deal.
+            pairs = [(w, i) for w in range(w_old) if part[w]
+                     for i in range(int(tw[w]))]
+            rng = np.random.RandomState(_cell_seed(lead, kk * s + ss))
+            perm = rng.permutation(len(pairs)) if pairs else np.array([],
+                                                                      int)
+            ofs = 0
+            for j in range(w_new):
+                take = int(tj[j])
+                sel = [pairs[perm[ofs + t]] for t in range(take)]
+                ofs += take
+                for dst, src in zip(nv_leaves, ov_leaves):
+                    for slot_idx, (w, i) in enumerate(sel):
+                        dst[j, kk, ss, slot_idx] = src[w, kk, ss, i]
+                new_counts[j, kk, ss] = int(cj[j])
+                # taken = min(counts, capacity) is DERIVED state: a cell
+                # that got fewer samples than its new count would claim
+                # must shrink capacity to its actual sample size, so the
+                # invariant and the HT weight counts/taken stay exact.
+                new_cap[j, kk, ss] = adopt if tj[j] == want[j] else int(
+                    tj[j])
+
+    # Re-key: deterministic fold chain from the old ring's lead key.
+    base = jnp.asarray(lead, jnp.uint32)
+    new_keys = np.zeros((w_new, k, 2), np.uint32)
+    for j in range(w_new):
+        shard_key = jax.random.fold_in(base, j + 1)
+        for kk in range(k):
+            new_keys[j, kk] = np.asarray(
+                jax.random.fold_in(shard_key, kk))
+
+    # Controller: re-split the global per-stratum capacity like the
+    # reservoirs (ceil, clamped); pressure/EMA replicate the worst shard.
+    gcap = state.ctrl.capacity.astype(np.int64).sum(axis=0)       # [S]
+    gbase = state.ctrl.base_capacity.astype(np.int64).sum(axis=0)
+
+    def resplit(g):
+        per = np.minimum(np.maximum(-(-g // w_new), 1), n_new)
+        return np.broadcast_to(per.astype(np.int32),
+                               (w_new, s)).copy()
+
+    new_ctrl = type(state.ctrl)(
+        capacity=resplit(gcap), base_capacity=resplit(gbase),
+        latency_ema=np.full((w_new,),
+                            np.max(state.ctrl.latency_ema), np.float32),
+        pressure=np.full((w_new,),
+                         np.max(state.ctrl.pressure), np.float32))
+
+    # Watermark: frontier pools to the global min (conservative — no
+    # shard may drop an item the old run would have kept); the arrival
+    # counters re-pool into shard 0 so the Σ-over-shards views the
+    # emissions report are preserved exactly.
+    def pool_row0(x, dtype=np.int32):
+        out = np.zeros((w_new,), dtype)
+        out[0] = x.astype(np.int64).sum()
+        return out
+
+    new_wm = type(state.wm)(
+        max_time=np.full((w_new,), np.min(state.wm.max_time), np.float32),
+        on_time=pool_row0(state.wm.on_time),
+        late=pool_row0(state.wm.late),
+        dropped=pool_row0(state.wm.dropped))
+
+    new_occupancy = np.minimum(new_counts, new_cap).sum(axis=1).astype(
+        np.int32)                                             # [W', S]
+    new_metrics = type(state.metrics)(
+        ingested=np.zeros((w_new, s), np.int32),
+        accepted=np.zeros((w_new, s), np.int32),
+        late=np.zeros((w_new, s), np.int32),
+        dropped=np.zeros((w_new, s), np.int32),
+        replaced=np.zeros((w_new, s), np.int32),
+        occupancy=np.ascontiguousarray(new_occupancy),
+        chunks=pool_row0(state.metrics.chunks),
+        items=pool_row0(state.metrics.items))
+    for f in ("ingested", "accepted", "late", "dropped", "replaced"):
+        getattr(new_metrics, f)[0] = getattr(state.metrics, f).astype(
+            np.int64).sum(axis=0)
+
+    new_iv = type(iv)(values=new_values, counts=new_counts,
+                      capacity=new_cap, key=new_keys)
+    new_window = type(state.window)(
+        intervals=new_iv,
+        cursor=np.full((w_new,), (open_new + 1) % k, np.int32),
+        filled=np.full((w_new,), min(open_new + 1, k), np.int32))
+    new_state = type(state)(
+        window=new_window,
+        slot_interval=np.broadcast_to(desired, (w_new, k)).copy(),
+        open_interval=np.full((w_new,), open_new, np.int32),
+        wm=new_wm, ctrl=new_ctrl, metrics=new_metrics)
+    if w_new == 1:
+        new_state = jax.tree.map(lambda x: x[0], new_state)
+
+    new_config = dict(ckpt.config)
+    new_config["num_shards"] = w_new
+    return dataclasses.replace(ckpt, state=new_state, config=new_config)
 
 
 # ---------------------------------------------------------------------------

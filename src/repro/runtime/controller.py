@@ -61,10 +61,16 @@ class ControllerConfig:
 
 
 def init(capacity: jax.Array) -> ControllerState:
+    # .copy() on BOTH leaves: capacity and base_capacity must be DISTINCT
+    # buffers (the executors donate the whole ControllerState to their
+    # compiled steps, and XLA rejects donating one buffer twice), and
+    # neither may alias the CALLER's array — ``jnp.asarray`` is a no-op
+    # on a same-dtype jax array, so without the first copy a donated run
+    # would delete the caller's buffer out from under later init() calls
+    # (the PR-7 shared-constant aliasing class).
     cap = jnp.asarray(capacity, jnp.int32)
-    # .copy(): capacity and base_capacity must be DISTINCT buffers — the
-    # executors donate the whole ControllerState to their compiled steps,
-    # and XLA rejects donating one buffer twice.
+    if isinstance(capacity, jax.Array):
+        cap = cap.copy()
     return ControllerState(capacity=cap, base_capacity=cap.copy(),
                            latency_ema=jnp.zeros((), jnp.float32),
                            pressure=jnp.zeros((), jnp.float32))

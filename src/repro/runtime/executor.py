@@ -22,12 +22,22 @@ core runs and *where* the host synchronizes:
   (query evaluation + controller + the only host sync) fire every
   ``emit_every`` chunks.
 
-Sharding (``num_shards > 1``) vmaps the core over per-shard states — the
-in-process analog of ``shard_map`` used throughout this repo's tests —
-with the ingest path built on :func:`repro.core.distributed.local_update`
-(zero collectives, asserted against the jaxpr) and emissions merging the
-per-(shard × interval × stratum) cells exactly like the Eq. 5 single-psum
-merge in ``core/distributed.py``.
+Sharding (``num_shards > 1``) runs the core per shard, with the ingest
+path built on :func:`repro.core.distributed.local_update` (zero
+collectives, asserted against the jaxpr) and emissions merging the
+per-(shard × interval × stratum) cells (Eq. 5). Two interchangeable
+deployments:
+
+* ``placement="vmap"`` (default) — single-device simulation: the core is
+  vmapped over the [W]-stacked states and the emission merge is a
+  host-side reshape-concat. This is the bitwise ORACLE.
+* ``placement="mesh"`` — real scale-out: the SAME vmapped core runs under
+  ``shard_map`` on a 1-D ``(shard,)`` device mesh
+  (``launch/mesh.make_stream_mesh``), one shard per device, and each
+  emission performs exactly ONE tiled all_gather
+  (``dist.gather_cells``) to merge the cells — proven bitwise-identical
+  to the vmap oracle (emissions, Eq. 5–9 widths, obs counters) in
+  ``tests/test_scaleout.py``.
 """
 from __future__ import annotations
 
@@ -65,6 +75,11 @@ class RuntimeConfig:
     allowed_lateness: float = 0.5      # watermark lag (event-time units)
     max_capacity: Optional[int] = None  # reservoir allocation N_max
     num_shards: int = 1                # >1: vmap-sharded local states
+    placement: str = "vmap"            # "vmap" single-device simulation |
+    #   "mesh" — one device per shard via shard_map over a (shard,) mesh
+    #   (launch/mesh.make_stream_mesh): ingest runs collective-free per
+    #   device, each emission performs exactly ONE all_gather merge
+    #   (dist.gather_cells). Bitwise-identical to the vmap oracle.
     controller: ctl.ControllerConfig = ctl.ControllerConfig()
     accuracy_query: Optional[str] = None  # registry name driving feedback
     batch_chunks: int = 4              # batched mode: chunks per window step
@@ -347,42 +362,102 @@ def _ingest_chunk_masked(cfg: RuntimeConfig, state: RuntimeState,
     return _finish_ingest(cfg, state, chunk, r, iv, desired, counts_before)
 
 
-def _merged_view(cfg: RuntimeConfig, state: RuntimeState):
-    """Shared sample pass: merged SampleView + StratumStats.
+@dataclass_pytree
+@dataclasses.dataclass
+class _GatherAux:
+    """Per-shard structure that rides the mesh emission's single
+    all_gather (``dist.gather_cells`` aux payload): everything the
+    emission needs from OTHER shards besides the sample cells, so the
+    merge stays at exactly one collective."""
+    lead_key: jax.Array       # [2] u32 — shard 0's interval-0 ring key
+    slot_interval: jax.Array  # [W, K] i32 — every shard's slot→interval
+    live: jax.Array           # [W, K] bool — every shard's ring liveness
+    counts_pos: jax.Array     # [W, K, S] bool — raw cell counts > 0
+
+
+def _pack_aux(cfg: RuntimeConfig, state: RuntimeState,
+              window0: win.WindowState) -> jax.Array:
+    """Flatten this device's aux words (u32) for ``gather_cells``."""
+    lead = state.window.intervals.key[0, 0].astype(jnp.uint32)   # [2]
+    slot = jax.lax.bitcast_convert_type(
+        state.slot_interval[0], jnp.uint32)                      # [K]
+    live = win._live_mask(window0).astype(jnp.uint32)            # [K]
+    pos = (window0.intervals.counts > 0).astype(
+        jnp.uint32).reshape(-1)                                  # [K·S]
+    return jnp.concatenate([lead, slot, live, pos])
+
+
+def _unpack_aux(cfg: RuntimeConfig, aux_all: jax.Array) -> _GatherAux:
+    k, s = cfg.num_intervals, cfg.num_strata
+    return _GatherAux(
+        lead_key=aux_all[0, :2],
+        slot_interval=jax.lax.bitcast_convert_type(
+            aux_all[:, 2:2 + k], jnp.int32),
+        live=aux_all[:, 2 + k:2 + 2 * k].astype(jnp.bool_),
+        counts_pos=aux_all[:, 2 + 2 * k:].reshape(
+            aux_all.shape[0], k, s).astype(jnp.bool_))
+
+
+def _merged_view(cfg: RuntimeConfig, state: RuntimeState,
+                 axis: Optional[str] = None):
+    """Shared sample pass: merged SampleView + StratumStats (+ mesh aux).
 
     Single shard: the window's (interval × stratum) cells. Sharded: the
     (shard × interval × stratum) cells — the same Eq. 5 concatenation the
     single-psum merges in ``core/distributed.py`` compute collectively.
+    ``axis`` set means we are INSIDE shard_map: each device computes its
+    local view and ONE tiled all_gather concatenates the shards in shard
+    order — bitwise the vmap oracle's reshape-concat.
+
+    Returns ``(view, stats, aux)`` — ``aux`` is ``None`` off-mesh.
     """
-    if cfg.num_shards == 1:
-        view = win.sample_view(state.window)
+    if axis is not None:
+        window0 = jax.tree.map(lambda x: x[0], state.window)
+        local = win.sample_view(window0)
+        view, aux_all = dist.gather_cells(
+            local, _pack_aux(cfg, state, window0), axis, cfg.num_shards)
+        aux = _unpack_aux(cfg, aux_all)
+    elif cfg.num_shards == 1:
+        view, aux = win.sample_view(state.window), None
     else:
         views = jax.vmap(win.sample_view)(state.window)
         n = views.values.shape[-1]
         view = qt.SampleView(values=views.values.reshape(-1, n),
                              counts=views.counts.reshape(-1),
                              taken=views.taken.reshape(-1))
+        aux = None
     stats = err.stratum_stats_from_sample(
         view.values, view.counts, view.taken, view.slot_mask())
-    return view, stats
+    return view, stats, aux
 
 
-def _emission_key(cfg: RuntimeConfig, state: RuntimeState) -> jax.Array:
+def _emission_key(cfg: RuntimeConfig, state: RuntimeState,
+                  aux: Optional[_GatherAux] = None) -> jax.Array:
+    if aux is not None:
+        # Mesh: each device only holds its OWN shard's ring keys; the
+        # gathered aux carries shard 0's lead key so every device folds
+        # the SAME key the vmap oracle uses.
+        return jax.random.fold_in(aux.lead_key, 0xE717)
     keys = state.window.intervals.key    # [K, 2] (or [W, K, 2] sharded)
     return jax.random.fold_in(keys.reshape(-1, keys.shape[-1])[0], 0xE717)
 
 
-def _window_ctx(cfg: RuntimeConfig, state: RuntimeState, view, stats):
+def _window_ctx(cfg: RuntimeConfig, state: RuntimeState, view, stats,
+                aux: Optional[_GatherAux] = None):
     """EmissionContext for the grouped (per-key / session) window kinds.
 
     Sharded states hold identical slot assignments on every shard (all
     shards consume the same event-time ramp — the ``stamp_sharded``
     contract), so the slot/interval structure comes from shard 0 while
     per-key activity pools counts over shards (a key's traffic is spread
-    across them).
+    across them).  On the mesh the same shard-0 structure and pooled
+    activity come from the gathered aux — bitwise the vmap expressions.
     """
     from repro.runtime.registry import EmissionContext
-    if cfg.num_shards == 1:
+    if aux is not None:
+        slot_interval = aux.slot_interval[0]
+        activity = aux.live[0][:, None] & jnp.any(aux.counts_pos, axis=0)
+    elif cfg.num_shards == 1:
         slot_interval = state.slot_interval
         activity = win.activity_mask(state.window)
     else:
@@ -398,16 +473,18 @@ def _window_ctx(cfg: RuntimeConfig, state: RuntimeState, view, stats):
 
 
 def _evaluate(cfg: RuntimeConfig, registry: QueryRegistry,
-              state: RuntimeState):
-    view, stats = _merged_view(cfg, state)
-    ctx = _window_ctx(cfg, state, view, stats)
+              state: RuntimeState, axis: Optional[str] = None):
+    view, stats, aux = _merged_view(cfg, state, axis)
+    ctx = _window_ctx(cfg, state, view, stats, aux)
     results = registry.evaluate_view(view, stats,
-                                     _emission_key(cfg, state), ctx=ctx)
+                                     _emission_key(cfg, state, aux),
+                                     ctx=ctx)
     return results, stats
 
 
 def _interval_cell_mask(cfg: RuntimeConfig, state: RuntimeState,
-                        interval: jax.Array) -> jax.Array:
+                        interval: jax.Array,
+                        aux: Optional[_GatherAux] = None) -> jax.Array:
     """Cell mask of one event interval in the merged view's flat order.
 
     Interval ``j`` lives in slot ``j mod K``; the mask additionally
@@ -417,6 +494,9 @@ def _interval_cell_mask(cfg: RuntimeConfig, state: RuntimeState,
     k, s = cfg.num_intervals, cfg.num_strata
     slot = jnp.mod(interval, k)
     sel = (jnp.arange(k * s, dtype=jnp.int32) // s) == slot      # [K·S]
+    if aux is not None:
+        holds = aux.slot_interval[:, slot] == interval           # [W]
+        return (holds[:, None] & sel[None, :]).reshape(-1)
     if cfg.num_shards == 1:
         return sel & (state.slot_interval[slot] == interval)
     holds = state.slot_interval[:, slot] == interval             # [W]
@@ -425,7 +505,7 @@ def _interval_cell_mask(cfg: RuntimeConfig, state: RuntimeState,
 
 def _evaluate_interval(cfg: RuntimeConfig, registry: QueryRegistry,
                        state: RuntimeState, interval: jax.Array,
-                       base_key: jax.Array):
+                       base_key: jax.Array, axis: Optional[str] = None):
     """Watermark-driven emission body: answer every standing query on the
     CLOSED interval's cells (merged kinds and per-key panes restrict to
     it; session windows read the full ring via the context).
@@ -436,8 +516,8 @@ def _evaluate_interval(cfg: RuntimeConfig, registry: QueryRegistry,
     A chunk-count-independent key is what makes the two modes' emitted
     (interval, answer, bounds) sequences bitwise identical.
     """
-    view, stats = _merged_view(cfg, state)
-    ctx = _window_ctx(cfg, state, view, stats)
+    view, stats, aux = _merged_view(cfg, state, axis)
+    ctx = _window_ctx(cfg, state, view, stats, aux)
     # Session windows at a close emission cover only CLOSED intervals
     # (ids <= the closing one): open intervals are still accumulating,
     # and an emission must answer over final data.  Note their support
@@ -449,7 +529,7 @@ def _evaluate_interval(cfg: RuntimeConfig, registry: QueryRegistry,
     # below are cadence-independent unconditionally.
     ctx.activity = ctx.activity & (ctx.slot_interval <= interval)[:, None]
     iview = win.restrict_view(view, _interval_cell_mask(cfg, state,
-                                                        interval))
+                                                        interval, aux))
     istats = err.stratum_stats_from_sample(
         iview.values, iview.counts, iview.taken, iview.slot_mask())
     key = jax.random.fold_in(base_key, interval)
@@ -459,7 +539,8 @@ def _evaluate_interval(cfg: RuntimeConfig, registry: QueryRegistry,
 
 def _apply_controller(cfg: RuntimeConfig, state: RuntimeState,
                       results, stats, latency_s,
-                      intervals: Optional[int] = None) -> RuntimeState:
+                      intervals: Optional[int] = None,
+                      axis: Optional[str] = None) -> RuntimeState:
     realized = (results[cfg.accuracy_query] if cfg.accuracy_query
                 else err.estimate_mean(stats))
     k = cfg.num_intervals if intervals is None else intervals
@@ -469,7 +550,16 @@ def _apply_controller(cfg: RuntimeConfig, state: RuntimeState,
         def per_shard(c, s):
             return ctl.update(c, cfg.controller, s, realized, latency_s,
                               intervals=k)
-        ctrl = jax.vmap(per_shard)(state.ctrl, _pooled_stats(cfg, stats))
+        pooled = _pooled_stats(cfg, stats)
+        if axis is not None:
+            # Mesh: the gathered stats are replicated [W·K·S]; this
+            # device's controller consumes its OWN shard's pooled row —
+            # bitwise the vmap oracle's row i.
+            i = jax.lax.axis_index(axis)
+            pooled = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, i, 1, 0),
+                pooled)
+        ctrl = jax.vmap(per_shard)(state.ctrl, pooled)
         return dataclasses.replace(state, ctrl=ctrl)
     ctrl = ctl.update(state.ctrl, cfg.controller, _pooled_stats(cfg, stats),
                       realized, latency_s, intervals=k)
@@ -519,6 +609,21 @@ class _ExecutorBase:
             raise ValueError(
                 f"unknown emission mode {cfg.emission!r}; expected "
                 "'cadence' or 'watermark'")
+        if cfg.placement not in ("vmap", "mesh"):
+            raise ValueError(
+                f"unknown placement {cfg.placement!r}; expected "
+                "'vmap' or 'mesh'")
+        self._mesh = None
+        self._axis: Optional[str] = None
+        if cfg.placement == "mesh":
+            if cfg.num_shards < 2:
+                raise ValueError(
+                    "placement='mesh' deploys one device per shard; it "
+                    f"needs num_shards > 1 (got {cfg.num_shards}) — use "
+                    "the default placement='vmap' for single-shard runs")
+            from repro.launch import mesh as lmesh
+            self._mesh = lmesh.make_stream_mesh(cfg.num_shards)
+            self._axis = lmesh.STREAM_AXIS
         if cfg.emission == "watermark" and (
                 cfg.allowed_lateness
                 >= (cfg.num_intervals - 1) * cfg.interval_span):
@@ -551,7 +656,7 @@ class _ExecutorBase:
         self.cfg = cfg
         self.registry = registry
         registry.freeze()     # traced steps close over the query list
-        self.state = init_state(cfg, key)
+        self.state = self._place_state(init_state(cfg, key))
         self.checkpointer = checkpointer
         # Host-side observability. The device counters in state.metrics
         # are unconditional; the Telemetry (event log + host mirrors) is
@@ -583,31 +688,74 @@ class _ExecutorBase:
         self._host_frontier = np.full((cfg.num_shards,), wmk.NEG_TIME,
                                       np.float32)
         self._emitted_through = -1    # newest interval already emitted
+        axis = self._axis
         if cfg.emission == "watermark":
             emit_sentinel = self._sentinel("emit_interval", allowed=1)
 
-            def emit_iv(state, interval, base_key, latency_s):
-                emit_sentinel.trace()          # TRACE time only
+            def emit_body(state, interval, base_key, latency_s):
                 results, istats = _evaluate_interval(
-                    cfg, registry, state, interval, base_key)
+                    cfg, registry, state, interval, base_key, axis=axis)
                 # Per-window pressure: the realized widths fed back are
                 # the closed interval's own, and the Neyman allocation
                 # is already per interval (intervals=1) — each newly
                 # opened interval adopts a capacity sized for ONE pane.
                 state = _apply_controller(cfg, state, results, istats,
-                                          latency_s, intervals=1)
+                                          latency_s, intervals=1,
+                                          axis=axis)
                 return state, results
+
+            emit_inner = self._shard_wrap(
+                emit_body, n_sharded=1, n_replicated=3, out_replicated=1)
+
+            def emit_iv(state, interval, base_key, latency_s):
+                emit_sentinel.trace()          # TRACE time only
+                return emit_inner(state, interval, base_key, latency_s)
 
             self._emit_interval_fn = jax.jit(emit_iv, donate_argnums=0)
         query_sentinel = self._sentinel("query", allowed=1)
+        query_inner = self._shard_wrap(
+            lambda st: _evaluate(cfg, registry, st, axis=axis)[0],
+            n_sharded=1, n_replicated=0, out_sharded=0, out_replicated=1)
 
         def query_fn(st):
             query_sentinel.trace()
-            return _evaluate(cfg, registry, st)[0]
+            return query_inner(st)
 
         self._query_fn = jax.jit(query_fn)
         if telemetry is not None:
             self.attach_telemetry(telemetry)
+
+    def _place_state(self, state: RuntimeState) -> RuntimeState:
+        """Commit a (host- or single-device-built) state to this
+        executor's placement: under ``placement="mesh"`` every leaf's
+        leading ``[W]`` axis is sharded one-shard-per-device; otherwise
+        the default device.  Checkpoint restore funnels through here so
+        a deserialized state lands exactly where a fresh one would."""
+        if self._mesh is None:
+            return jax.device_put(state)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(
+            state, NamedSharding(self._mesh, P(self._axis)))
+
+    def _shard_wrap(self, fn, n_sharded: int, n_replicated: int,
+                    out_sharded: int = 1, out_replicated: int = 1):
+        """Wrap ``fn`` in shard_map on the stream mesh (identity off-mesh).
+
+        Arguments are ``n_sharded`` leading-[W]-sharded pytrees followed
+        by ``n_replicated`` replicated ones; outputs likewise.
+        ``check_rep=False`` is required for the scan bodies on the
+        pinned jax 0.4.37.
+        """
+        if self._mesh is None:
+            return fn
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        a = P(self._axis)
+        in_specs = (a,) * n_sharded + (P(),) * n_replicated
+        outs = (a,) * out_sharded + (P(),) * out_replicated
+        return shard_map(fn, mesh=self._mesh, in_specs=in_specs,
+                         out_specs=outs[0] if len(outs) == 1 else outs,
+                         check_rep=False)
 
     def _sentinel(self, name: str, allowed: int) -> RetraceSentinel:
         s = RetraceSentinel(f"{self.mode}.{name}", allowed=allowed,
@@ -655,7 +803,7 @@ class _ExecutorBase:
         a second instance would re-pay trace+compile inside the timed
         region.
         """
-        self.state = init_state(self.cfg, key)
+        self.state = self._place_state(init_state(self.cfg, key))
         self.emissions = []
         self.chunks_pushed = 0
         self._emission_cursor = 0
@@ -839,7 +987,7 @@ class BatchedExecutor(_ExecutorBase):
         if fn is None:
             self._step_sentinel.allow(1)      # declared compile: new shape
             sentinel = self._step_sentinel
-            cfg, registry = self.cfg, self.registry
+            cfg, registry, axis = self.cfg, self.registry, self._axis
             ingest = _ingest_chunk
             if cfg.num_shards > 1:
                 ingest = jax.vmap(_ingest_chunk, in_axes=(None, 0, 0))
@@ -850,22 +998,37 @@ class BatchedExecutor(_ExecutorBase):
                 # per-interval-close emissions AFTER the flush, so the
                 # emitted answers are a property of event time, not of
                 # where the driver drew its batch boundaries.
-                def step(state, stacked, latency_prev):
-                    sentinel.trace()
+                def body_fn(state, stacked, latency_prev):
                     def body(st, ch):
                         return ingest(cfg, st, ch), None
                     state, _ = jax.lax.scan(body, state, stacked)
                     return state, None
             else:
-                def step(state, stacked, latency_prev):
-                    sentinel.trace()
+                def body_fn(state, stacked, latency_prev):
                     def body(st, ch):
                         return ingest(cfg, st, ch), None
                     state, _ = jax.lax.scan(body, state, stacked)
-                    results, stats = _evaluate(cfg, registry, state)
+                    results, stats = _evaluate(cfg, registry, state,
+                                               axis=axis)
                     state = _apply_controller(cfg, state, results, stats,
-                                              latency_prev)
+                                              latency_prev, axis=axis)
                     return state, results
+
+            inner = body_fn
+            if self._mesh is not None:
+                # Stacked micro-batch leaves are [B, W, M]: the scan axis
+                # stays whole, the shard axis splits one row per device.
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+                a = P(self._axis)
+                inner = shard_map(
+                    body_fn, mesh=self._mesh,
+                    in_specs=(a, P(None, self._axis), P()),
+                    out_specs=(a, P()), check_rep=False)
+
+            def step(state, stacked, latency_prev):
+                sentinel.trace()
+                return inner(state, stacked, latency_prev)
 
             fn = jax.jit(step, donate_argnums=0).lower(
                 state, stacked, latency_prev).compile()
@@ -889,6 +1052,10 @@ class BatchedExecutor(_ExecutorBase):
         if not self._pending:
             return
         stacked = _stack(self._pending)
+        if self._mesh is not None:
+            from repro.runtime import records
+            stacked = records.place_sharded(stacked, self._mesh,
+                                            leading_batch=True)
         pending, n = self._pending, len(self._pending)
         self._pending = []
         lat = jnp.float32(self._last_latency)
@@ -945,13 +1112,17 @@ class PipelinedExecutor(_ExecutorBase):
                  telemetry: Optional[obm.Telemetry] = None):
         super().__init__(cfg, registry, key, checkpointer, telemetry)
         step_sentinel = self._sentinel("step", allowed=1)
+        axis = self._axis
         ingest = _ingest_chunk
         if cfg.num_shards > 1:
             ingest = jax.vmap(_ingest_chunk, in_axes=(None, 0, 0))
+        step_inner = self._shard_wrap(
+            lambda st, ch: ingest(cfg, st, ch),
+            n_sharded=2, n_replicated=0, out_sharded=1, out_replicated=0)
 
         def core(state, chunk):
             step_sentinel.trace()          # fires at TRACE time only
-            return ingest(cfg, state, chunk)
+            return step_inner(state, chunk)
 
         # donate_argnums=0: the ring buffer is updated in place every
         # chunk — the hot loop never re-materializes [K, S, N_max, …].
@@ -962,12 +1133,18 @@ class PipelinedExecutor(_ExecutorBase):
 
         emit_sentinel = self._sentinel("emit", allowed=1)
 
+        def emit_body(state, latency_s):
+            results, stats = _evaluate(cfg, registry, state, axis=axis)
+            state = _apply_controller(cfg, state, results, stats,
+                                      latency_s, axis=axis)
+            return state, results
+
+        emit_inner = self._shard_wrap(emit_body, n_sharded=1,
+                                      n_replicated=1, out_replicated=1)
+
         def emit(state, latency_s):
             emit_sentinel.trace()
-            results, stats = _evaluate(cfg, registry, state)
-            state = _apply_controller(cfg, state, results, stats,
-                                      latency_s)
-            return state, results
+            return emit_inner(state, latency_s)
 
         self._emit = jax.jit(emit, donate_argnums=0)
         self._chunks_since_emit = 0
@@ -990,6 +1167,9 @@ class PipelinedExecutor(_ExecutorBase):
             # arrival — idle wall time between periods (or before the
             # first chunk ever) must not read as processing latency.
             self._emit_t0 = time.perf_counter()
+        if self._mesh is not None:
+            from repro.runtime import records
+            chunk = records.place_sharded(chunk, self._mesh)
         self.state = self._step(self.state, chunk)     # async dispatch
         self._items_since_emit += int(chunk.values.size)
         self._chunks_since_emit += 1

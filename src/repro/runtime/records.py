@@ -80,6 +80,21 @@ def stamp_sharded(chunk: StreamChunk, t0: float,
     )
 
 
+def place_sharded(chunk: TimestampedChunk, mesh,
+                  leading_batch: bool = False) -> TimestampedChunk:
+    """Place a sharded ``[W, M]`` chunk onto a stream mesh, one shard row
+    per device — so the jitted step consumes it without a host-side
+    resharding transfer.  ``leading_batch`` places a stacked
+    ``[B, W, M]`` micro-batch (the batched executor's scan input), which
+    shards axis 1 instead.  No-op shape-wise; the arrays just gain a
+    :class:`~jax.sharding.NamedSharding` over the ``shard`` mesh axis.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import STREAM_AXIS
+    spec = P(None, STREAM_AXIS) if leading_batch else P(STREAM_AXIS)
+    return jax.device_put(chunk, NamedSharding(mesh, spec))
+
+
 def timestamped_stream(aggregator: StreamAggregator, chunk_size: int,
                        num_chunks: int, rate: float,
                        start_epoch: int = 0) -> Iterator[TimestampedChunk]:

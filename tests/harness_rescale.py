@@ -1,0 +1,191 @@
+"""Elastic rescale harness — the executable spec of restore-time rescale.
+
+Extends ``harness_crash`` to schedules that change ``num_shards``
+mid-stream: the stream runs in SEGMENTS, and at each boundary the live
+executor is captured, the checkpoint is rescaled with
+:func:`repro.runtime.checkpoint.migrate`, serialized, and restored into
+a warm executor of the next shard count — grow/shrink under sustained
+traffic, with event time continuing across the boundary (chunk offsets
+are global, and one ``ReplayableStream`` per shard count supplies the
+same event-time schedule at every width).
+
+Exactly-once across rescale: ``run_schedule(..., crash_after=k)`` kills
+the victim after global chunk ``k`` (only serialized checkpoint bytes
+survive the crash — never the live executor), ``resume_schedule``
+recovers from the bytes — replaying the stream suffix at the
+checkpoint's OWN shard count, then re-performing every remaining
+rescale (``migrate`` is deterministic, so the recovered run re-derives
+the same post-rescale state bitwise) — and
+``assert_rescale_exactly_once`` checks the deduped output against the
+uninterrupted reference **bitwise**, emission for emission.
+"""
+import jax
+
+from harness_crash import assert_emission_equal
+
+from repro.runtime import checkpoint as ckp
+from repro.runtime.checkpoint import Checkpointer
+
+
+def segment_bounds(segments):
+    """``[(num_shards, start, end)]`` with global chunk offsets."""
+    out, start = [], 0
+    for w, n in segments:
+        out.append((w, start, start + n))
+        start += n
+    return out
+
+
+def _slot_width(ex):
+    """The executor's per-shard reservoir allocation ``N_max`` (the
+    slot-buffer width the migrated state must be re-packed into)."""
+    leaf = jax.tree_util.tree_leaves(ex.state.window.intervals.values)[0]
+    return int(leaf.shape[3] if ex.cfg.num_shards > 1 else leaf.shape[2])
+
+
+def _boundary_sync(ex):
+    # A rescale boundary is a barrier: batched executors force their
+    # partial micro-batch through so the boundary capture incorporates
+    # every pushed chunk (the migrated state must never depend on
+    # replaying pre-boundary chunks from a different-width stream).
+    if ex.mode == "batched" and getattr(ex, "_pending", None):
+        ex._flush()
+
+
+def _start_segment(executors, bounds, seg_idx, payload, key,
+                   every_chunks):
+    """Reset (first segment) or restore-from-bytes a warm executor for
+    segment ``seg_idx``; attach a fresh cadence checkpointer with a
+    bootstrap save so a crash before the first cadence point in the
+    segment still recovers from the segment's own start."""
+    ex = executors[bounds[seg_idx][0]]
+    ex.checkpointer = None
+    if payload is None:
+        ex.reset(key)
+    else:
+        ex.restore(ckp.from_bytes(payload, ex.state))
+    if every_chunks is not None:
+        ck = Checkpointer(every_chunks=every_chunks)
+        ex.checkpointer = ck
+        ck.save(ex)
+    return ex
+
+
+def _drive(executors, streams, bounds, seg_idx, ex, offset,
+           crash_after=None):
+    """Push from global ``offset`` (inside segment ``seg_idx``) to the
+    end of the schedule, rescaling at every boundary.  Returns
+    ``(emissions, payload)`` — ``payload`` is the surviving serialized
+    checkpoint when ``crash_after`` was reached, else ``None``."""
+    ems = []
+    every = ex.checkpointer.every_chunks if ex.checkpointer else None
+    for i in range(seg_idx, len(bounds)):
+        w, _, end = bounds[i]
+        while offset < end:
+            ex.push(streams[w].chunk_at(offset))
+            offset += 1
+            if crash_after is not None and offset == crash_after:
+                # --- CRASH: only serialized bytes cross this line. ---
+                payload = ex.checkpointer.latest
+                ex.checkpointer = None
+                return ems + list(ex.emissions), payload
+        if i == len(bounds) - 1:
+            ems += ex.finalize()
+            ex.checkpointer = None
+            return ems, None
+        # --- rescale boundary: barrier, capture, migrate, serialize,
+        #     restore into the next width's warm executor. ---
+        _boundary_sync(ex)
+        ems += list(ex.emissions)
+        snap = ckp.capture(ex)
+        assert snap.stream_offset == end, (snap.stream_offset, end)
+        ex.checkpointer = None
+        # The migrated reservoirs must land in the TARGET executor's
+        # slot allocation (split_capacity shrinks per-shard N_max as
+        # shards grow), so the rescale is told that executor's width.
+        nxt = executors[bounds[i + 1][0]]
+        payload = ckp.to_bytes(ckp.migrate(snap, bounds[i + 1][0],
+                                           new_max_capacity=_slot_width(nxt)))
+        ex = _start_segment(executors, bounds, i + 1, payload, None,
+                            every)
+    return ems, None
+
+
+def run_schedule(executors, streams, segments, key, every_chunks=None,
+                 crash_after=None):
+    """Drive the full rescale schedule from a cold start.
+
+    ``executors``/``streams`` map ``num_shards`` to a warm executor /
+    replayable stream of that width.  Without ``crash_after``: returns
+    the uninterrupted reference emissions.  With ``crash_after=k``
+    (victim mode, requires ``every_chunks``): the run is killed after
+    global chunk ``k`` and ``(pre_crash_emissions, latest_payload)`` is
+    returned.
+    """
+    bounds = segment_bounds(segments)
+    ex = _start_segment(executors, bounds, 0, None, key, every_chunks)
+    if crash_after == 0:
+        payload = ex.checkpointer.latest
+        ex.checkpointer = None
+        return [], payload
+    ems, payload = _drive(executors, streams, bounds, 0, ex, 0,
+                          crash_after=crash_after)
+    return ems if crash_after is None else (ems, payload)
+
+
+def resume_schedule(executors, streams, segments, payload):
+    """Recover from serialized ``payload`` and finish the schedule —
+    replay at the payload's own shard count, then re-perform every
+    remaining rescale.  Returns the recovered emissions (indices start
+    at the payload's ``emissions_done``)."""
+    bounds = segment_bounds(segments)
+    head = ckp.peek(payload)
+    w_ck = int(head["config"]["num_shards"])
+    off = int(head["stream_offset"])
+    # The payload's shard count names its segment; an offset AT a
+    # boundary with the earlier width resumes pre-migrate (re-deriving
+    # the rescale), with the later width post-migrate.
+    cands = [i for i, (w, s, e) in enumerate(bounds)
+             if w == w_ck and s <= off <= e]
+    assert cands, (w_ck, off, bounds)
+    live = [i for i in cands if off < bounds[i][2]]
+    seg = live[0] if live else cands[0]
+    ex = _start_segment(executors, bounds, seg, payload, None, None)
+    ems, crashed = _drive(executors, streams, bounds, seg, ex, off)
+    assert crashed is None
+    return ems
+
+
+def assert_rescale_exactly_once(reference, pre_crash, payload,
+                                recovered):
+    """The deduped output (pre-crash emissions below the surviving
+    checkpoint's answers cursor + the recovered run's) must equal the
+    uninterrupted reference bitwise, with contiguous indices."""
+    done = int(ckp.peek(payload)["emissions_done"])
+    combined = pre_crash[:done] + recovered
+    assert [em.index for em in combined] == list(range(len(reference))), (
+        f"emission indices after rescale recovery: "
+        f"{[em.index for em in combined]} vs {len(reference)} expected")
+    if recovered:
+        assert recovered[0].index == done
+    for a, b in zip(reference, combined):
+        assert_emission_equal(a, b)
+
+
+def sweep_rescale_crash_points(executors, streams, segments, key,
+                               every_chunks, crash_points,
+                               reference=None):
+    """Kill-after-chunk-k for every k in ``crash_points`` (including
+    points at and across rescale boundaries) against one uninterrupted
+    reference schedule; executors are reused warm throughout."""
+    if reference is None:
+        reference = run_schedule(executors, streams, segments, key)
+    for k in crash_points:
+        pre, payload = run_schedule(executors, streams, segments, key,
+                                    every_chunks=every_chunks,
+                                    crash_after=k)
+        assert payload is not None
+        recovered = resume_schedule(executors, streams, segments,
+                                    payload)
+        assert_rescale_exactly_once(reference, pre, payload, recovered)
+    return reference

@@ -497,7 +497,7 @@ def test_sharded_stats_merge_matches_global_psum(key):
     chunks = _chunks(num_chunks=4, chunk_size=256)
     ex = BatchedExecutor(cfg, _registry(), key)
     ex.run(chunks)
-    _, stats = _merged_view(cfg, ex.state)
+    _, stats, _ = _merged_view(cfg, ex.state)
     local = err.estimate_sum(stats)
 
     mesh = jax.make_mesh((1,), ("data",))
